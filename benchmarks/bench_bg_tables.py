@@ -1,0 +1,87 @@
+"""Paper Table I / Table II analogues.
+
+Table I: full-HD throughput and cost vs window radius r — the paper's
+headline claim is that both are ~independent of r (its FPGA resources and fps
+stay flat). Here: wall time (CPU, compiled jnp core path), per-pixel work,
+and the grid footprint, for r in {4, 8, 12, 16}.
+
+Table II: cross-implementation speed — exact BF vs BG (batch), BG (streaming),
+BG pow2/fixed-point — ns/pixel on one image (the BF is O(r^2) per pixel, the
+BG O(1); image sized so the BF finishes in reasonable time).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bg_denoise import TABLE1_SWEEP
+from repro.core import (
+    BGConfig,
+    add_gaussian_noise,
+    bilateral_filter,
+    bilateral_grid_filter,
+    bilateral_grid_filter_fixed,
+    bilateral_grid_filter_streaming,
+    grid_shape,
+    synthetic_image,
+)
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = False):
+    rows = []
+    # ---------------- Table I: r sweep at full HD
+    h, w = (270, 480) if quick else (1080, 1920)
+    noisy = add_gaussian_noise(synthetic_image(h, w), 30.0)
+    times = {}
+    for wl in TABLE1_SWEEP:
+        cfg = wl.bg
+        dt = _time(bilateral_grid_filter, noisy, cfg, reps=2 if quick else 3)
+        times[cfg.r] = dt
+        gx, gy, gz = grid_shape(h, w, cfg)
+        rows.append(
+            (
+                f"table1/bg_fullhd_r{cfg.r}",
+                dt * 1e6,
+                f"ns_per_pixel={dt*1e9/(h*w):.2f} grid={gx}x{gy}x{gz}",
+            )
+        )
+    flatness = max(times.values()) / min(times.values())
+    rows.append(
+        ("table1/r_independence", 0.0, f"max_over_min_time={flatness:.2f} (paper: ~1.0)")
+    )
+
+    # ---------------- Table II: implementations at a BF-feasible size
+    h2, w2 = (96, 128) if quick else (256, 384)
+    noisy2 = add_gaussian_noise(synthetic_image(h2, w2), 30.0)
+    r, ss, sr = 12, 8.0, 70.0
+    cfg = BGConfig(r=r, sigma_s=ss, sigma_r=sr)
+    cfg_p2 = BGConfig(r=r, sigma_s=ss, sigma_r=sr, weight_mode="pow2")
+    impls = {
+        "bf_exact": lambda: bilateral_filter(noisy2, r, ss, sr),
+        "bg": lambda: bilateral_grid_filter(noisy2, cfg),
+        "bg_streaming": lambda: bilateral_grid_filter_streaming(noisy2, cfg),
+        "bg_fixed_pow2": lambda: bilateral_grid_filter_fixed(noisy2, cfg_p2),
+    }
+    base = None
+    for name, fn in impls.items():
+        dt = _time(fn, reps=2 if quick else 3)
+        if name == "bf_exact":
+            base = dt
+        rows.append(
+            (
+                f"table2/{name}",
+                dt * 1e6,
+                f"ns_per_pixel={dt*1e9/(h2*w2):.2f} speedup_vs_bf={base/dt:.1f}x",
+            )
+        )
+    return rows

@@ -1,0 +1,42 @@
+"""LM-substrate micro-benchmarks: smoke-scale train step + decode step wall
+times per architecture family (CPU; functional sanity + relative movement)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, get_smoke_config
+from repro.data import lm_batches
+from repro.models import init_caches, init_params, forward
+from repro.train import OptConfig, make_train_step
+from repro.train.train_step import init_train_state
+
+
+def run(quick: bool = False):
+    rows = []
+    archs = ("yi-6b", "qwen2-moe-a2.7b", "recurrentgemma-9b") if quick else ARCHS
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        if cfg.frontend == "audio":
+            continue  # train bench uses token batches
+        step = jax.jit(make_train_step(cfg, OptConfig()))
+        opt = init_train_state(params)
+        batch = next(lm_batches(cfg.vocab_size, 4, 32, 1))
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.frontend == "vision":
+            batch["cross_ctx"] = jnp.zeros((4, cfg.cross_attn_tokens, cfg.d_model))
+        params, opt, m = step(params, opt, batch)  # compile+run
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+        rows.append(
+            (
+                f"lm/train_step_smoke/{arch}",
+                dt * 1e6,
+                f"loss={float(m['loss']):.3f} tokens_per_s={4*32/dt:.0f}",
+            )
+        )
+    return rows

@@ -1,0 +1,36 @@
+"""Roofline summary rows from the multi-pod dry-run artifacts.
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun); emits one row
+per runnable cell: us_per_call = the modeled step bound (dominant roofline
+term), derived = the three terms + dominant + useful-FLOPs ratio.
+"""
+import glob
+import json
+import os
+
+
+def run(quick: bool = False):
+    rows = []
+    paths = sorted(glob.glob(os.path.join("results", "dryrun", "*.json")))
+    if not paths:
+        return [("roofline/no_artifacts", 0.0,
+                 "run repro.launch.dryrun first (results/dryrun empty)")]
+    for p in paths:
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            continue
+        if quick and r.get("mesh") != "16x16":
+            continue
+        rf = r["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append(
+            (
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                bound * 1e6,
+                f"dom={rf['dominant']} comp={rf['compute_s']:.3f}s "
+                f"mem={rf['memory_s']:.3f}s coll={rf['collective_s']:.3f}s "
+                f"useful={r.get('useful_flops_ratio') or 0:.3f} "
+                f"fraction={rf['compute_s']/bound*100 if bound else 0:.1f}%",
+            )
+        )
+    return rows

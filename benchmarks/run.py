@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure + the kernel
+hillclimb + LM substrate micro-benches. Prints ``name,us_per_call,derived``
+CSV. The multi-pod roofline table is produced by repro.launch.roofline from
+the dry-run artifacts (results/dryrun)."""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sweep sizes")
+    ap.add_argument(
+        "--only", default=None, help="comma list: tables,quality,kernels,lm"
+    )
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        bench_bg_kernels,
+        bench_bg_quality,
+        bench_bg_tables,
+        bench_lm,
+        bench_roofline,
+    )
+
+    modules = {
+        "tables": bench_bg_tables,
+        "quality": bench_bg_quality,
+        "kernels": bench_bg_kernels,
+        "lm": bench_lm,
+        "roofline": bench_roofline,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failed = False
+    for name, mod in modules.items():
+        try:
+            for row in mod.run(quick=args.quick):
+                bench, us, derived = row
+                print(f"{bench},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed = True
+            print(f"{name},ERROR,see stderr", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

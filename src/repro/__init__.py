@@ -1,0 +1,4 @@
+"""repro: TPU-native bilateral grid (Hashimoto & Takamaeda-Yamazaki 2021)
++ multi-pod JAX LM training/serving framework."""
+
+__version__ = "1.0.0"

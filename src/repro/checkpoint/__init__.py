@@ -1,0 +1,3 @@
+from .checkpointer import load_pytree, save_pytree
+from .elastic import elastic_restore, train_state_shardings
+from .manager import CheckpointManager

@@ -1,0 +1,85 @@
+"""Low-level checkpoint IO: pytree <-> npz with atomic writes.
+
+Layout is mesh-agnostic (full arrays keyed by tree path), so a checkpoint
+written under one mesh restores under any other — the basis of elastic
+rescaling (elastic.py). Writes go to a temp dir + atomic rename; a partially
+written checkpoint is never visible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "tree_paths"]
+
+_SEP = "|"
+
+
+def tree_paths(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save_pytree(path: str, tree, meta: Optional[dict] = None) -> None:
+    """Atomic: write into <path>.tmp.* then rename to <path>."""
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=os.path.basename(path) + ".tmp.", dir=parent)
+    try:
+        arrays = {
+            k: np.asarray(jax.device_get(v)) for k, v in tree_paths(tree).items()
+        }
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta or {}, f)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def load_pytree(path: str, like, shardings=None) -> Any:
+    """Restore into the structure of `like` (pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching pytree of Shardings —
+    leaves are device_put directly to their (possibly different) mesh."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        data = {k: z[k] for k in z.files}
+    like_paths = tree_paths(like)
+    missing = set(like_paths) - set(data)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    shard_paths = tree_paths(shardings) if shardings is not None else {}
+
+    leaves_like, treedef = jax.tree.flatten(like)
+    flat_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for (path_keys, leaf) in flat_with_path:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_keys
+        )
+        arr = data[key].astype(leaf.dtype)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        if key in shard_paths:
+            arr = jax.device_put(arr, shard_paths[key])
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def load_meta(path: str) -> dict:
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)

@@ -1,0 +1,57 @@
+"""Elastic rescaling: restore any checkpoint onto any mesh.
+
+Checkpoints are mesh-agnostic (full logical arrays), so scaling from N to M
+chips is: build the new mesh, resolve each param's logical axes against it,
+and device_put shard-by-shard during load. Combined with the auto-resume in
+Trainer this gives restart-with-different-topology semantics — the practical
+answer to node loss at 1000+-node scale (drop to a spare-sized mesh, resume,
+scale back later).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params, param_logical_axes
+from repro.sharding.partitioning import DEFAULT_RULES, param_sharding
+from repro.train.optimizer import adamw_init
+
+from .manager import CheckpointManager
+
+__all__ = ["train_state_shardings", "elastic_restore"]
+
+
+def train_state_shardings(cfg: ModelConfig, mesh, rules: Optional[dict] = None):
+    """NamedShardings for (params, opt_state) on `mesh` from logical axes."""
+    rules = rules or DEFAULT_RULES
+    axes = param_logical_axes(cfg)
+    p_sh = jax.tree.map(
+        lambda a: param_sharding(a, mesh, rules), axes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    opt_sh = {
+        "m": p_sh,
+        "v": p_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+    return p_sh, opt_sh
+
+
+def elastic_restore(
+    ckpt: CheckpointManager,
+    cfg: ModelConfig,
+    mesh,
+    step: Optional[int] = None,
+    rules: Optional[dict] = None,
+):
+    """Restore (params, opt_state, meta) re-sharded onto `mesh`."""
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    p_sh, o_sh = train_state_shardings(cfg, mesh, rules)
+    state_shape = {"params": params_shape, "opt": opt_shape}
+    shardings = {"params": p_sh, "opt": o_sh}
+    state, meta = ckpt.restore(state_shape, step=step, shardings=shardings)
+    return state["params"], state["opt"], meta

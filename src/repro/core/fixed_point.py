@@ -1,0 +1,166 @@
+"""Shift-only / integer arithmetic mode — the paper's Figs. 7-8, bit-faithfully.
+
+The FPGA removes all floating point by (a) quantizing every Gaussian tap to a
+power of two (multiplication = shift) and (b) keeping the grid in integer
+(count, sum) pairs. We emulate the same datapath in int32:
+
+  GC   integer (count, sum) accumulation (exact).
+  GF   separable width-3 convolution where each tap is 2^-k: implemented as
+       ``x << (F - k)`` accumulation at F fractional bits. The common 2^F
+       scale cancels in the normalization ratio.
+  norm two-step integer division producing the cell value at Q=8 fractional
+       bits (quotient + remainder refinement, as a divider pipeline would).
+  TI   three cascaded integer lerps (z, then y, then x) with Q=8 coefficient
+       LUTs (the paper's L1/L2/L3), rescaling >>8 after each stage so every
+       intermediate fits 32 bits.
+
+Bounds: with F=8 fractional GF bits, values fit int32 for r <= 31 (the paper
+uses r <= 16).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bilateral_grid import BGConfig, grid_shape
+
+__all__ = [
+    "pow2_shift",
+    "intensity_luts",
+    "bilateral_grid_filter_fixed",
+]
+
+_F = 8  # GF fixed-point fractional bits
+_Q = 8  # interpolation-coefficient fractional bits
+
+
+def pow2_shift(cfg: BGConfig) -> int:
+    """Shift k for the off-center tap: e = exp(-1/(2 sigma_g^2)) ~ 2^-k.
+
+    Returns k >= 0; k > 30 means the tap underflows to zero (no neighbor
+    contribution — sigma_g tiny)."""
+    e = float(np.exp(-1.0 / (2.0 * cfg.sigma_g**2)))
+    if e <= 2.0**-30:
+        return 31
+    k = int(np.clip(np.round(-np.log2(e)), 0, 31))
+    return k
+
+
+def intensity_luts(cfg: BGConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """The paper's L1 LUT: intensity l -> (z bin, z fraction at Q bits).
+
+    GC uses round(l/rs) (derived as z0 + (zf >= 0.5)); TI uses (z0, zf).
+    """
+    levels = np.arange(int(cfg.intensity_max) + 1, dtype=np.float64)
+    fz = levels / cfg.range_scale
+    z0 = np.floor(fz).astype(np.int32)
+    zf = np.round((fz - z0) * (1 << _Q)).astype(np.int32)
+    # keep zf in [0, 2^Q - 1] so the lerp never indexes past z0+1
+    carry = zf >> _Q
+    z0 = z0 + carry
+    zf = zf - (carry << _Q)
+    return z0, zf
+
+
+def _conv3_shift_axis(x: jnp.ndarray, k: int, axis: int) -> jnp.ndarray:
+    """Integer width-3 conv with taps (2^-k, 1, 2^-k) at F fractional bits.
+
+    Input is at F fractional bits already; neighbors contribute x >> k
+    (exact when k <= F, which holds for every practical sigma_g)."""
+    lo = jnp.roll(x, 1, axis=axis)
+    hi = jnp.roll(x, -1, axis=axis)
+    idx_first = [slice(None)] * x.ndim
+    idx_first[axis] = slice(0, 1)
+    idx_last = [slice(None)] * x.ndim
+    idx_last[axis] = slice(-1, None)
+    lo = lo.at[tuple(idx_first)].set(0)
+    hi = hi.at[tuple(idx_last)].set(0)
+    if k >= 31:
+        return x
+    return x + ((lo + hi) >> k)
+
+
+def _div_q8(num: jnp.ndarray, den: jnp.ndarray) -> jnp.ndarray:
+    """floor(num/den * 2^Q) without overflowing int32 (two-step division)."""
+    den_safe = jnp.maximum(den, 1)
+    q = num // den_safe
+    rem = num - q * den_safe
+    frac = (rem << _Q) // den_safe
+    out = (q << _Q) + frac
+    return jnp.where(den > 0, out, 0)
+
+
+def _lerp_q8(a: jnp.ndarray, b: jnp.ndarray, f_q8: jnp.ndarray) -> jnp.ndarray:
+    """((1-f) a + f b) with f at Q=8 bits; result rescaled back (>> Q)."""
+    return (a * ((1 << _Q) - f_q8) + b * f_q8) >> _Q
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def bilateral_grid_filter_fixed(image: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+    """Integer/shift-only BG pipeline. Input integer-valued [0,255] (h,w).
+
+    Returns float32 image (integer-valued), like the quantized float path.
+    """
+    if cfg.r > 31:
+        raise ValueError("fixed-point mode supports r <= 31 (int32 bounds)")
+    image_i = image.astype(jnp.int32)
+    h, w = image.shape
+    gx, gy, gz = grid_shape(h, w, cfg)
+    k = pow2_shift(cfg)
+    z0_lut_np, zf_lut_np = intensity_luts(cfg)
+    z0_lut = jnp.asarray(z0_lut_np)
+    zf_lut = jnp.asarray(zf_lut_np)
+
+    # ---- GC (exact integer) ----
+    ix = jnp.arange(h, dtype=jnp.int32)
+    iy = jnp.arange(w, dtype=jnp.int32)
+    # round(i/r) = (2i + r) // (2r)  for integers — the counter logic of Alg. 1
+    xg = (2 * ix + cfg.r) // (2 * cfg.r)
+    yg = (2 * iy + cfg.r) // (2 * cfg.r)
+    z_q = z0_lut[image_i] + (zf_lut[image_i] >> (_Q - 1))  # round(fz)
+    x_idx = jnp.broadcast_to(xg[:, None], (h, w))
+    y_idx = jnp.broadcast_to(yg[None, :], (h, w))
+    vals = jnp.stack([jnp.ones((h, w), jnp.int32), image_i], axis=-1)
+    grid = jnp.zeros((gx, gy, gz, 2), jnp.int32).at[x_idx, y_idx, z_q].add(vals)
+
+    # ---- GF (shift-only, F fractional bits) ----
+    g = grid << _F
+    for axis in range(3):
+        g = _conv3_shift_axis(g, k, axis)
+    # the 2^F scale cancels in the count/sum ratio
+    grid_f_q8 = _div_q8(g[..., 1], g[..., 0])  # (gx,gy,gz) at Q bits
+
+    # ---- TI (cascaded integer lerps, L1/L2/L3 LUTs) ----
+    # L2/L3: spatial fractions — frac(i/r) at Q bits == ((i mod r) << Q) // r
+    xf = ((ix % cfg.r) << _Q) // cfg.r
+    yf = ((iy % cfg.r) << _Q) // cfg.r
+    x0 = ix // cfg.r
+    y0 = iy // cfg.r
+    z0 = z0_lut[image_i]
+    zf = zf_lut[image_i]
+
+    x0b = jnp.broadcast_to(x0[:, None], (h, w))
+    y0b = jnp.broadcast_to(y0[None, :], (h, w))
+    xfb = jnp.broadcast_to(xf[:, None], (h, w))
+    yfb = jnp.broadcast_to(yf[None, :], (h, w))
+
+    def corner(di, dj):
+        c0 = grid_f_q8[x0b + di, y0b + dj, z0]
+        c1 = grid_f_q8[x0b + di, y0b + dj, z0 + 1]
+        return _lerp_q8(c0, c1, zf)
+
+    v00 = corner(0, 0)
+    v01 = corner(0, 1)
+    v10 = corner(1, 0)
+    v11 = corner(1, 1)
+    v0 = _lerp_q8(v00, v01, yfb)
+    v1 = _lerp_q8(v10, v11, yfb)
+    v = _lerp_q8(v0, v1, xfb)  # Q8 intensity
+
+    out = (v + (1 << (_Q - 1))) >> _Q  # round
+    out = jnp.clip(out, 0, jnp.int32(cfg.intensity_max))
+    return out.astype(jnp.float32)

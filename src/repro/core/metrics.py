@@ -1,0 +1,58 @@
+"""Image-quality metrics: MSSIM (Wang et al. 2004, as configured in the paper)
+and PSNR.
+
+The paper fixes C1 = (0.01*255)^2, C2 = (0.03*255)^2 and uses a 7x7 square
+(uniform) window; MSSIM is the mean of the SSIM map over valid positions.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mssim", "psnr"]
+
+_C1 = (0.01 * 255.0) ** 2
+_C2 = (0.03 * 255.0) ** 2
+
+
+def _uniform_filter(x: jnp.ndarray, win: int) -> jnp.ndarray:
+    """Mean over win x win windows, 'valid' region only."""
+    ones = jnp.ones((), x.dtype)
+    s = jax.lax.reduce_window(
+        x,
+        0.0 * ones,
+        jax.lax.add,
+        window_dimensions=(win, win),
+        window_strides=(1, 1),
+        padding="VALID",
+    )
+    return s / (win * win)
+
+
+@partial(jax.jit, static_argnames=("win",))
+def mssim(a: jnp.ndarray, b: jnp.ndarray, win: int = 7) -> jnp.ndarray:
+    """Mean structural similarity between two [0,255] grayscale images."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    mu_a = _uniform_filter(a, win)
+    mu_b = _uniform_filter(b, win)
+    mu_aa = _uniform_filter(a * a, win)
+    mu_bb = _uniform_filter(b * b, win)
+    mu_ab = _uniform_filter(a * b, win)
+    var_a = jnp.maximum(mu_aa - mu_a * mu_a, 0.0)
+    var_b = jnp.maximum(mu_bb - mu_b * mu_b, 0.0)
+    cov = mu_ab - mu_a * mu_b
+    ssim_map = ((2.0 * mu_a * mu_b + _C1) * (2.0 * cov + _C2)) / (
+        (mu_a * mu_a + mu_b * mu_b + _C1) * (var_a + var_b + _C2)
+    )
+    return jnp.mean(ssim_map)
+
+
+@jax.jit
+def psnr(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    mse = jnp.mean((a - b) ** 2)
+    return 10.0 * jnp.log10(255.0**2 / jnp.maximum(mse, 1e-12))

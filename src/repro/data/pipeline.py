@@ -1,0 +1,77 @@
+"""Data pipeline with the paper's BG denoiser as a first-class stage.
+
+This is where the paper's contribution plugs into the LM framework
+(DESIGN.md §Arch-applicability): the [vlm] image frontend and the [audio]
+spectrogram frontend both run bilateral-grid denoising before patch/frame
+embedding. The denoiser is batched with vmap and uses the Pallas kernels on
+TPU (interpret elsewhere).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilateral_grid import BGConfig, bilateral_grid_filter
+
+__all__ = ["denoise_batch", "patchify_embed", "vlm_preprocess", "spectrogram_denoise"]
+
+
+@partial(jax.jit, static_argnames=("cfg", "use_kernels"))
+def denoise_batch(
+    images: jnp.ndarray, cfg: BGConfig, use_kernels: bool = False
+) -> jnp.ndarray:
+    """(B, H, W) noisy [0,255] -> denoised, via vmapped BG pipeline."""
+    if use_kernels:
+        from repro.kernels import bilateral_grid_filter_pallas
+
+        fn = lambda im: bilateral_grid_filter_pallas(im, cfg)
+    else:
+        fn = lambda im: bilateral_grid_filter(im, cfg)
+    return jax.vmap(fn)(images)
+
+
+def patchify_embed(
+    images: jnp.ndarray, patch: int, dim: int, seed: int = 0
+) -> jnp.ndarray:
+    """(B,H,W) -> (B, n_patches, dim) with a fixed random projection.
+
+    Stands in for the learned patch-embedding of the stubbed vision tower;
+    deterministic so tests can assert exact shapes/values.
+    """
+    B, H, W = images.shape
+    hp, wp = H // patch, W // patch
+    x = images[:, : hp * patch, : wp * patch]
+    x = x.reshape(B, hp, patch, wp, patch).transpose(0, 1, 3, 2, 4)
+    x = x.reshape(B, hp * wp, patch * patch) / 255.0
+    key = jax.random.PRNGKey(seed)
+    proj = jax.random.normal(key, (patch * patch, dim), jnp.float32) * (
+        1.0 / np.sqrt(patch * patch)
+    )
+    return x @ proj
+
+
+def vlm_preprocess(
+    images: jnp.ndarray,
+    bg_cfg: BGConfig,
+    patch: int,
+    dim: int,
+    denoise: bool = True,
+) -> jnp.ndarray:
+    """Full [vlm] frontend stage: BG denoise -> patchify -> project."""
+    if denoise:
+        images = denoise_batch(images, bg_cfg)
+    return patchify_embed(images, patch, dim)
+
+
+def spectrogram_denoise(spec: jnp.ndarray, bg_cfg: Optional[BGConfig] = None):
+    """[audio] stage: treat a (B, T, F) spectrogram as images in [0,255]."""
+    bg_cfg = bg_cfg or BGConfig(r=4, sigma_s=2.0, sigma_r=40.0)
+    lo = jnp.min(spec)
+    hi = jnp.max(spec)
+    scaled = (spec - lo) / jnp.maximum(hi - lo, 1e-9) * 255.0
+    den = denoise_batch(scaled, bg_cfg)
+    return den / 255.0 * (hi - lo) + lo

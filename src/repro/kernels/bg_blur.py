@@ -1,0 +1,81 @@
+"""GF (3x3x3 Gaussian) Pallas kernel.
+
+One x-plane per grid step with prev/next plane halos passed as extra refs to
+the same operand (the standard Pallas stencil-halo pattern). Both homogeneous
+channels (count, sum) are blurred with identical taps in one pass — the
+paper's "numerator and denominator calculated together" (Fig. 7).
+
+Block layout (1, 2, gz, gy): gy on lanes, z/channel on sublanes; the y-axis
+conv is a lane shift, the z-axis conv a sublane shift, the x-axis conv a
+weighted sum of the three plane refs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BGConfig, default_interpret, grid_shape, taps_np
+
+__all__ = ["bg_blur_kernel_call"]
+
+
+def _shift_zero(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
+    """Roll with zero fill (width-3 conv neighbor along one axis)."""
+    rolled = jnp.roll(x, shift, axis=axis)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, 1) if shift == 1 else slice(-1, None)
+    return rolled.at[tuple(idx)].set(0.0)
+
+
+def _conv3(x: jnp.ndarray, taps, axis: int) -> jnp.ndarray:
+    return (
+        taps[0] * _shift_zero(x, 1, axis)
+        + taps[1] * x
+        + taps[2] * _shift_zero(x, -1, axis)
+    )
+
+
+def _kernel(prev_ref, cur_ref, next_ref, out_ref, *, taps, gx):
+    s = pl.program_id(0)
+    prev = prev_ref[0]  # (2, gz, gy)
+    cur = cur_ref[0]
+    nxt = next_ref[0]
+    prev = jnp.where(s == 0, jnp.zeros_like(prev), prev)
+    nxt = jnp.where(s == gx - 1, jnp.zeros_like(nxt), nxt)
+    mix = taps[0] * prev + taps[1] * cur + taps[2] * nxt  # x-axis
+    mix = _conv3(mix, taps, 1)  # z axis (sublanes)
+    mix = _conv3(mix, taps, 2)  # y axis (lanes)
+    out_ref[...] = mix[None]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def bg_blur_kernel_call(
+    grid: jnp.ndarray, cfg: BGConfig, interpret: bool | None = None
+) -> jnp.ndarray:
+    """Pallas GF. (gx, gy, gz, 2) grid -> blurred grid, same shape.
+
+    Matches ref.ref_blur exactly (separable taps, zero borders).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    gx, gy, gz, _ = grid.shape
+    gtpu = jnp.transpose(grid.astype(jnp.float32), (0, 3, 2, 1))  # (gx,2,gz,gy)
+    taps = tuple(float(t) for t in taps_np(cfg))
+
+    kern = functools.partial(_kernel, taps=taps, gx=gx)
+    spec = lambda off: pl.BlockSpec(
+        (1, 2, gz, gy),
+        lambda s: (jnp.clip(s + off, 0, gx - 1), 0, 0, 0),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(gx,),
+        in_specs=[spec(-1), spec(0), spec(+1)],
+        out_specs=pl.BlockSpec((1, 2, gz, gy), lambda s: (s, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gx, 2, gz, gy), jnp.float32),
+        interpret=interpret,
+    )(gtpu, gtpu, gtpu)
+    return jnp.transpose(out, (0, 3, 2, 1))

@@ -1,0 +1,80 @@
+"""GC (grid creation) Pallas kernel.
+
+TPU adaptation of the paper's read-modify-write removal (Fig. 2): the FPGA
+caches the z-column grid(x,y,*) in registers and updates it at II=1; a TPU
+has no efficient fine-grained scatter, so the same regular access pattern is
+re-expressed as a *dense one-hot reduction*:
+
+    grid[c, g, z] = sum_{i,j in cell} onehot(zbin(i,j) == z) * (1, f(i,j))
+
+with the column->cell map as a constant one-hot matrix (MXU matmul) and the
+row->cell map static per stripe (the paper's counters).
+
+Grid layout inside the kernel: one x-plane per grid step, block (1, 2, gz, gy)
+— channels/bins on sublanes, gy on lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import BGConfig, default_interpret, gc_col_onehot, grid_shape
+
+__all__ = ["bg_create_kernel_call"]
+
+
+def _kernel(img_ref, mask_ref, col_ref, out_ref, *, inv_rs, gz):
+    """One grid step = one x-plane: rows (r, w) -> plane (1, 2, gz, gy)."""
+    px = img_ref[...].astype(jnp.float32)  # (r, w)
+    msk = mask_ref[...].astype(jnp.float32)
+    col_oh = col_ref[...]  # (w, gy)
+    zbin = jnp.floor(px * inv_rs + 0.5).astype(jnp.int32)
+    zi = jax.lax.broadcasted_iota(jnp.int32, zbin.shape + (gz,), 2)
+    ohz = jnp.where(zbin[..., None] == zi, 1.0, 0.0) * msk[..., None]  # (r,w,gz)
+    cnt = jnp.einsum("iwz,wg->zg", ohz, col_oh)  # (gz, gy)
+    ssum = jnp.einsum("iwz,wg->zg", ohz * px[..., None], col_oh)
+    out_ref[...] = jnp.stack([cnt, ssum], axis=0)[None]  # (1, 2, gz, gy)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "interpret")
+)
+def bg_create_kernel_call(
+    image: jnp.ndarray, cfg: BGConfig, interpret: bool | None = None
+) -> jnp.ndarray:
+    """Pallas GC. (h, w) image -> (gx, gy, gz, 2) float32 grid.
+
+    Matches ref.ref_create exactly (same rounding, same zero borders).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    h, w = image.shape
+    r = cfg.r
+    gx, gy, gz = grid_shape(h, w, cfg)
+
+    # pad rows so GC cell x covers padded rows [x*r, (x+1)*r):
+    # round(i/r) == x  <=>  i in [x*r - floor(r/2), x*r + ceil(r/2))
+    top = r // 2
+    hp = gx * r
+    img_p = jnp.pad(image.astype(jnp.float32), ((top, hp - top - h), (0, 0)))
+    msk_p = jnp.pad(jnp.ones((h, w), jnp.float32), ((top, hp - top - h), (0, 0)))
+
+    col_oh = jnp.asarray(gc_col_onehot(w, gy, r))
+    kern = functools.partial(_kernel, inv_rs=1.0 / cfg.range_scale, gz=gz)
+    out = pl.pallas_call(
+        kern,
+        grid=(gx,),
+        in_specs=[
+            pl.BlockSpec((r, w), lambda s: (s, 0)),
+            pl.BlockSpec((r, w), lambda s: (s, 0)),
+            pl.BlockSpec((w, gy), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2, gz, gy), lambda s: (s, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gx, 2, gz, gy), jnp.float32),
+        interpret=interpret,
+    )(img_p, msk_p, col_oh)
+    return jnp.transpose(out, (0, 3, 2, 1))  # -> (gx, gy, gz, 2)

@@ -1,0 +1,218 @@
+"""Fused GC||GF||TI Pallas kernel — the paper's macro-pipeline on a TPU.
+
+The FPGA's headline trick (Fig. 4) is that grid creation of stripe x, the
+Gaussian filter of plane x-1 and the trilinear slice of stripe x-2 run
+*concurrently* over a working set of three raw planes + two blurred planes +
+an r-line buffer. Here the same dataflow becomes a single `pallas_call` whose
+sequential grid dimension is the stripe index and whose VMEM scratch is
+exactly that working set:
+
+  step s:   GC(stripe s)  ->  completes raw plane s        (scratch R*)
+            GF(plane s-1) <-  raw planes s-2, s-1, s       (scratch B1)
+            TI(stripe s-2) <- blurred planes s-2, s-1      (line buf S*)
+
+HBM traffic is therefore one image read + one image write + nothing else —
+the grid never leaves VMEM, which is the paper's "low memory footprint"
+property translated to the TPU memory hierarchy. Output stripes are written
+through the revisited output block (last write wins for the warm-up steps).
+
+Paper normalization mode (eq. 4) only; r*gz is bounded (see common.py), so
+per-step temporaries are O(r*gz*w) ~ hundreds of KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import (
+    BGConfig,
+    default_interpret,
+    gc_col_onehot,
+    gc_row_split,
+    grid_shape,
+    taps_np,
+    ti_col_onehots,
+)
+
+__all__ = ["bg_fused_kernel_call"]
+
+
+def _conv3_axis(x, taps, axis):
+    lo = jnp.roll(x, 1, axis=axis)
+    hi = jnp.roll(x, -1, axis=axis)
+    idx0 = [slice(None)] * x.ndim
+    idx0[axis] = slice(0, 1)
+    idx1 = [slice(None)] * x.ndim
+    idx1[axis] = slice(-1, None)
+    lo = lo.at[tuple(idx0)].set(0.0)
+    hi = hi.at[tuple(idx1)].set(0.0)
+    return taps[0] * lo + taps[1] * x + taps[2] * hi
+
+
+def _kernel(
+    img_ref,
+    msk_ref,
+    col_ref,
+    oh0_ref,
+    oh1_ref,
+    yf_ref,
+    xf_ref,
+    out_ref,
+    r2_s,
+    r1_s,
+    apart_s,
+    b1_s,
+    s2_s,
+    s1_s,
+    *,
+    taps,
+    inv_rs,
+    gz,
+    split,
+    n_stripes,
+):
+    s = pl.program_id(0)
+    col_oh = col_ref[...]
+    y_oh0 = oh0_ref[...]
+    y_oh1 = oh1_ref[...]
+    yf = yf_ref[0]
+    xf = xf_ref[0]
+
+    @pl.when(s == 0)
+    def _init():
+        r2_s[...] = jnp.zeros_like(r2_s)
+        r1_s[...] = jnp.zeros_like(r1_s)
+        apart_s[...] = jnp.zeros_like(apart_s)
+        b1_s[...] = jnp.zeros_like(b1_s)
+        s2_s[...] = jnp.zeros_like(s2_s)
+        s1_s[...] = jnp.zeros_like(s1_s)
+
+    px = img_ref[...].astype(jnp.float32)  # (r, w)
+    live = jnp.where(s < n_stripes, 1.0, 0.0)
+    msk = msk_ref[...].astype(jnp.float32) * live
+
+    # ---- GC: one-hot z reduction, static row split, constant column matmul
+    zbin = jnp.floor(px * inv_rs + 0.5).astype(jnp.int32)
+    zi = jax.lax.broadcasted_iota(jnp.int32, zbin.shape + (gz,), 2)
+    ohz = jnp.where(zbin[..., None] == zi, 1.0, 0.0) * msk[..., None]
+    ohz_f = ohz * px[..., None]
+
+    def reduce(rows):
+        cnt = jnp.einsum("iwz,wg->zg", ohz[rows], col_oh)
+        ssum = jnp.einsum("iwz,wg->zg", ohz_f[rows], col_oh)
+        return jnp.stack([cnt, ssum], axis=0)  # (2, gz, gy)
+
+    contrib_cur = reduce(slice(0, split))       # -> plane s
+    contrib_next = reduce(slice(split, None))   # -> plane s+1
+
+    r2 = r2_s[...]
+    r1 = r1_s[...]
+    r0 = apart_s[...] + contrib_cur  # raw plane s complete
+
+    # ---- GF of plane s-1 (both homogeneous channels, one pass)
+    mix = taps[0] * r2 + taps[1] * r1 + taps[2] * r0  # x-axis
+    mix = _conv3_axis(mix, taps, 1)  # z
+    mix = _conv3_axis(mix, taps, 2)  # y
+    b_new = jnp.where(mix[0] > 1e-12, mix[1] / jnp.maximum(mix[0], 1e-12), 0.0)
+
+    # ---- TI of stripe s-2 against blurred planes s-2 (b1) and s-1 (b_new)
+    spx = s2_s[...]
+    fz = spx * inv_rs
+    z0 = jnp.floor(fz).astype(jnp.int32)
+    zfr = fz - z0.astype(jnp.float32)
+    zi2 = jax.lax.broadcasted_iota(jnp.int32, z0.shape + (gz,), 2)
+    wz = (
+        jnp.where(z0[..., None] == zi2, 1.0, 0.0) * (1.0 - zfr)[..., None]
+        + jnp.where((z0 + 1)[..., None] == zi2, 1.0, 0.0) * zfr[..., None]
+    )
+    b1 = b1_s[...]
+    planes = {
+        (0, 0): jnp.einsum("zg,wg->wz", b1, y_oh0),
+        (0, 1): jnp.einsum("zg,wg->wz", b1, y_oh1),
+        (1, 0): jnp.einsum("zg,wg->wz", b_new, y_oh0),
+        (1, 1): jnp.einsum("zg,wg->wz", b_new, y_oh1),
+    }
+    wx = (1.0 - xf, xf)
+    wy = (1.0 - yf, yf)
+    out = jnp.zeros(spx.shape, jnp.float32)
+    for di in (0, 1):
+        for dj in (0, 1):
+            zint = jnp.einsum("wz,iwz->iw", planes[(di, dj)], wz)
+            out = out + wx[di][:, None] * wy[dj][None, :] * zint
+    out_ref[...] = out
+
+    # ---- rotate the working set (the macro-pipeline advance)
+    r2_s[...] = r1
+    r1_s[...] = r0
+    apart_s[...] = contrib_next
+    b1_s[...] = b_new
+    s2_s[...] = s1_s[...]
+    s1_s[...] = px
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def bg_fused_kernel_call(
+    image: jnp.ndarray, cfg: BGConfig, interpret: bool | None = None
+) -> jnp.ndarray:
+    """Fused BG pipeline. (h, w) image -> float32 (h, w) filtered surface.
+
+    Matches ref.ref_fused (paper normalization, unquantized).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    h, w = image.shape
+    r = cfg.r
+    _, gy, gz = grid_shape(h, w, cfg)
+    n = -(-h // r)
+    hp = n * r
+    img_p = jnp.pad(image.astype(jnp.float32), ((0, hp - h), (0, 0)))
+    msk_p = jnp.pad(jnp.ones((h, w), jnp.float32), ((0, hp - h), (0, 0)))
+
+    oh0, oh1, yf = ti_col_onehots(w, gy, r)
+    kern = functools.partial(
+        _kernel,
+        taps=tuple(float(t) for t in taps_np(cfg)),
+        inv_rs=1.0 / cfg.range_scale,
+        gz=gz,
+        split=gc_row_split(r),
+        n_stripes=n,
+    )
+    const = lambda shape: pl.BlockSpec(shape, lambda s: tuple(0 for _ in shape))
+    out = pl.pallas_call(
+        kern,
+        grid=(n + 2,),
+        in_specs=[
+            pl.BlockSpec((r, w), lambda s: (jnp.minimum(s, n - 1), 0)),
+            pl.BlockSpec((r, w), lambda s: (jnp.minimum(s, n - 1), 0)),
+            const((w, gy)),
+            const((w, gy)),
+            const((w, gy)),
+            const((1, w)),
+            const((1, r)),
+        ],
+        out_specs=pl.BlockSpec((r, w), lambda s: (jnp.maximum(s - 2, 0), 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, w), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, gz, gy), jnp.float32),  # raw plane s-2
+            pltpu.VMEM((2, gz, gy), jnp.float32),  # raw plane s-1
+            pltpu.VMEM((2, gz, gy), jnp.float32),  # partial plane s(+1)
+            pltpu.VMEM((gz, gy), jnp.float32),  # blurred plane s-2
+            pltpu.VMEM((r, w), jnp.float32),  # line buffer stripe s-2
+            pltpu.VMEM((r, w), jnp.float32),  # line buffer stripe s-1
+        ],
+        interpret=interpret,
+    )(
+        img_p,
+        msk_p,
+        jnp.asarray(gc_col_onehot(w, gy, r)),
+        jnp.asarray(oh0),
+        jnp.asarray(oh1),
+        jnp.asarray(yf)[None],
+        jnp.asarray((np.arange(r) / r).astype(np.float32))[None],
+    )
+    return out[:h]

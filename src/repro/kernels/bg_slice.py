@@ -1,0 +1,114 @@
+"""TI (trilinear slice) Pallas kernel.
+
+One grid step processes one floor-aligned row-stripe of r pixels rows; it
+needs exactly two blurred planes (floor(x) and floor(x)+1), passed as two refs
+into the same operand — mirroring the FPGA's two-plane grid_f working set
+(Fig. 6). The per-pixel 8-corner gather is decomposed into:
+
+  * constant one-hot column matmuls (y corners — MXU),
+  * a dense one-hot z-interpolation tensor (z corners — VPU),
+  * static row weights (x corners — the paper's L2 LUT).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import BGConfig, default_interpret, grid_shape, ti_col_onehots
+
+__all__ = ["bg_slice_kernel_call"]
+
+
+def _kernel(
+    lo_ref, hi_ref, img_ref, oh0_ref, oh1_ref, yf_ref, xf_ref, out_ref, *, inv_rs, gz
+):
+    lo = lo_ref[0]  # (gz, gy)
+    hi = hi_ref[0]
+    px = img_ref[...].astype(jnp.float32)  # (r, w)
+    y_oh0 = oh0_ref[...]
+    y_oh1 = oh1_ref[...]
+    yf = yf_ref[0]  # (w,)
+    xf = xf_ref[0]  # (r,)
+
+    fz = px * inv_rs
+    z0 = jnp.floor(fz).astype(jnp.int32)
+    zf = fz - z0.astype(jnp.float32)
+    zi = jax.lax.broadcasted_iota(jnp.int32, z0.shape + (gz,), 2)
+    wz = (
+        jnp.where(z0[..., None] == zi, 1.0, 0.0) * (1.0 - zf)[..., None]
+        + jnp.where((z0 + 1)[..., None] == zi, 1.0, 0.0) * zf[..., None]
+    )  # (r, w, gz)
+
+    # y-corner gathers as constant one-hot matmuls: (gz,gy)x(w,gy) -> (w,gz)
+    planes = {
+        (0, 0): jnp.einsum("zg,wg->wz", lo, y_oh0),
+        (0, 1): jnp.einsum("zg,wg->wz", lo, y_oh1),
+        (1, 0): jnp.einsum("zg,wg->wz", hi, y_oh0),
+        (1, 1): jnp.einsum("zg,wg->wz", hi, y_oh1),
+    }
+    wx = (1.0 - xf, xf)  # (r,) each
+    wy = (1.0 - yf, yf)  # (w,) each
+    out = jnp.zeros(px.shape, jnp.float32)
+    for di in (0, 1):
+        for dj in (0, 1):
+            zint = jnp.einsum("wz,iwz->iw", planes[(di, dj)], wz)
+            out = out + wx[di][:, None] * wy[dj][None, :] * zint
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def bg_slice_kernel_call(
+    grid_f: jnp.ndarray,
+    image: jnp.ndarray,
+    cfg: BGConfig,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Pallas TI. Scalar grid (gx, gy, gz) + image (h, w) -> float32 (h, w).
+
+    Matches ref.ref_slice exactly.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    h, w = image.shape
+    r = cfg.r
+    gx, gy, gz = grid_f.shape
+    ncx = -(-h // r)
+    hp = ncx * r
+    img_p = jnp.pad(image.astype(jnp.float32), ((0, hp - h), (0, 0)))
+    gtpu = jnp.transpose(grid_f.astype(jnp.float32), (0, 2, 1))  # (gx, gz, gy)
+
+    oh0, oh1, yf = ti_col_onehots(w, gy, r)
+    xf = (np.arange(r) / r).astype(np.float32)
+    kern = functools.partial(_kernel, inv_rs=1.0 / cfg.range_scale, gz=gz)
+    plane = lambda off: pl.BlockSpec(
+        (1, gz, gy), lambda s: (jnp.minimum(s + off, gx - 1), 0, 0)
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(ncx,),
+        in_specs=[
+            plane(0),
+            plane(1),
+            pl.BlockSpec((r, w), lambda s: (s, 0)),
+            pl.BlockSpec((w, gy), lambda s: (0, 0)),
+            pl.BlockSpec((w, gy), lambda s: (0, 0)),
+            pl.BlockSpec((1, w), lambda s: (0, 0)),
+            pl.BlockSpec((1, r), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, w), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, w), jnp.float32),
+        interpret=interpret,
+    )(
+        gtpu,
+        gtpu,
+        img_p,
+        jnp.asarray(oh0),
+        jnp.asarray(oh1),
+        jnp.asarray(yf)[None],
+        jnp.asarray(xf)[None],
+    )
+    return out[:h]

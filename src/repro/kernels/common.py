@@ -1,0 +1,67 @@
+"""Shared helpers for the bilateral-grid Pallas kernels.
+
+Working-set note (why these kernels fit VMEM by construction): the paper's
+grid has gz = floor(I/(r*sigma_r/sigma_s)) + 2 intensity bins, so the product
+r*gz ~ I/(sigma_r/sigma_s) + 2r is bounded (~100 for the paper's settings).
+Every per-step tensor below is O(r*gz*W) or O(gy*gz) — a few hundred KB for
+full-HD frames. This is the same property that bounds the FPGA's BRAM usage,
+carried over to VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.bilateral_grid import BGConfig, grid_shape
+
+__all__ = [
+    "BGConfig",
+    "grid_shape",
+    "default_interpret",
+    "gc_col_onehot",
+    "ti_col_onehots",
+    "gc_row_split",
+    "taps_np",
+]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except real TPUs (the TARGET)."""
+    return jax.default_backend() != "tpu"
+
+
+def taps_np(cfg: BGConfig) -> np.ndarray:
+    e = float(np.exp(-1.0 / (2.0 * cfg.sigma_g**2)))
+    if cfg.weight_mode == "pow2":
+        e = 0.0 if e <= 2.0**-30 else float(2.0 ** np.round(np.log2(e)))
+    return np.asarray([e, 1.0, e], dtype=np.float32)
+
+
+def gc_col_onehot(w: int, gy: int, r: int) -> np.ndarray:
+    """Constant (w, gy) one-hot: column j -> grid cell round(j/r).
+
+    Replaces the FPGA's column counters; as a constant matrix the GC's
+    column scatter becomes a dense MXU matmul.
+    """
+    cells = (2 * np.arange(w) + r) // (2 * r)  # round-half-up(j/r)
+    oh = np.zeros((w, gy), np.float32)
+    oh[np.arange(w), cells] = 1.0
+    return oh
+
+
+def ti_col_onehots(w: int, gy: int, r: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Constant TI column maps: floor cells one-hots for dj=0,1 and y fracs."""
+    y0 = np.arange(w) // r
+    yf = (np.arange(w) / r - y0).astype(np.float32)
+    oh0 = np.zeros((w, gy), np.float32)
+    oh0[np.arange(w), y0] = 1.0
+    oh1 = np.zeros((w, gy), np.float32)
+    oh1[np.arange(w), np.minimum(y0 + 1, gy - 1)] = 1.0
+    return oh0, oh1, yf
+
+
+def gc_row_split(r: int) -> int:
+    """Rows [0, c) of a stripe land on plane s; rows [c, r) on plane s+1,
+    where c = number of i in [0,r) with round(i/r) == 0."""
+    i = np.arange(r)
+    return int(np.sum((2 * i + r) // (2 * r) == 0))

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle defines the exact semantics the kernel must reproduce; tests sweep
+shapes/dtypes and assert allclose(kernel(interpret=True), ref).
+
+The oracles delegate to repro.core so the kernels are pinned to the same
+arithmetic as the validated whole-image implementation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bilateral_grid import (
+    BGConfig,
+    bilateral_grid_filter,
+    grid_blur,
+    grid_create,
+    grid_normalize,
+    grid_slice,
+)
+
+__all__ = ["ref_create", "ref_blur", "ref_slice", "ref_fused"]
+
+
+def ref_create(image: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+    """(h, w) image -> (gx, gy, gz, 2) grid of (count, sum)."""
+    return grid_create(image.astype(jnp.float32), cfg)
+
+
+def ref_blur(grid: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+    """3x3x3 separable Gaussian on the homogeneous grid (both channels)."""
+    return grid_blur(grid.astype(jnp.float32), cfg)
+
+
+def ref_slice(grid_f: jnp.ndarray, image: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+    """Trilinear slice of a scalar grid at fv(i). -> float32 (h, w)."""
+    return grid_slice(grid_f.astype(jnp.float32), image.astype(jnp.float32), cfg)
+
+
+def ref_fused(image: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+    """Whole pipeline GC->GF->TI (paper normalization), unquantized output."""
+    return bilateral_grid_filter(
+        image.astype(jnp.float32), cfg, quantize_output=False
+    )
+
+
+def ref_normalize(blurred: jnp.ndarray) -> jnp.ndarray:
+    return grid_normalize(blurred)

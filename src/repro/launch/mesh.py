@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_size", "LATENCY_HIDING_FLAGS"]
+
+# XLA flags a real-cluster launch passes for compute/comm overlap; listed here
+# so train.py/serve.py and the docs share one source of truth.
+LATENCY_HIDING_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_megacore_fusion_allow_ags=true "
+    "--xla_enable_async_collective_permute=true "
+    "--xla_tpu_enable_ag_backward_pipelining=true"
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_size(mesh) -> int:
+    """Total data-parallel ways (pod x data)."""
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

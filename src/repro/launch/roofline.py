@@ -1,0 +1,87 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+__all__ = ["load_cells", "render_roofline_table", "render_dryrun_table"]
+
+
+def load_cells(directory: str):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        cells.append(json.load(open(p)))
+    return cells
+
+
+def _fix(rec):
+    """Roofline fraction: bound term / achievable (compute term)."""
+    r = rec["roofline"]
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return r["compute_s"] / bound if bound > 0 else 0.0
+
+
+def render_dryrun_table(cells) -> str:
+    out = ["| arch | shape | mesh | status | bytes/dev (arg+tmp+out) | compile s | collectives (count) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP: {r['reason']} | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — | — |")
+            continue
+        m = r["memory"]
+        total = sum(m.get(k, 0) for k in
+                    ("argument_size_in_bytes", "temp_size_in_bytes",
+                     "output_size_in_bytes"))
+        colls = r["roofline"]["collective_breakdown"]
+        cstr = ", ".join(f"{k}×{int(v['count'])}" for k, v in sorted(colls.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{total/1e9:.1f} GB | {r['compile_s']:.0f} | {cstr or '—'} |"
+        )
+    return "\n".join(out)
+
+
+def render_roofline_table(cells, mesh: str = "16x16") -> str:
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/HLO_FLOPs | roofline fraction |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in cells:
+        if r.get("mesh") != mesh or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+            f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+            f"**{rf['dominant']}** | {r.get('useful_flops_ratio', 0):.3f} | "
+            f"{_fix(r)*100:.1f}% |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print("## Dry-run\n")
+    print(render_dryrun_table(cells))
+    print("\n## Roofline (single-pod)\n")
+    print(render_roofline_table(cells, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

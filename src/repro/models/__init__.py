@@ -1,0 +1,19 @@
+"""Model stack: layers, attention, recurrent mixers, MoE, pattern models."""
+from .model import (
+    cache_logical_axes,
+    forward,
+    init_caches,
+    init_params,
+    model_flops_per_token,
+    param_logical_axes,
+)
+
+__all__ = [
+    "cache_logical_axes",
+    "forward",
+    "init_caches",
+    "init_params",
+    "model_flops_per_token",
+    "param_logical_axes",
+]
+from .model import splice_cache  # noqa: E402

@@ -1,0 +1,306 @@
+"""Attention: GQA/MQA, global / sliding-window / chunked-causal masks,
+logit softcapping, partial RoPE, cross-attention, and decode KV caches
+(ring-buffer caches for windowed layers so a 32k-context gemma2 local layer
+only holds its 4k window).
+
+Modes:
+  train   — full self-attention over (B, S), no cache.
+  prefill — as train, but also returns a filled decode cache.
+  decode  — S_q == 1 step against the cache; per-sample positions (B,).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnSpec, ModelConfig
+from repro.sharding.partitioning import logical_constraint, logical_constraint_padded
+
+from .layers import apply_rope, dense, dtype_of, init_dense, rope_angles
+
+__all__ = ["init_attention", "attention", "init_cache", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, spec: AttnSpec):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    q_dim = cfg.n_heads * cfg.head_dim
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    dt = dtype_of(cfg.param_dtype)
+    return {
+        "q": init_dense(ks[0], d, q_dim, bias=spec.qkv_bias, dtype=dt),
+        "k": init_dense(ks[1], d, kv_dim, bias=spec.qkv_bias, dtype=dt),
+        "v": init_dense(ks[2], d, kv_dim, bias=spec.qkv_bias, dtype=dt),
+        "o": init_dense(ks[3], q_dim, d, dtype=dt),
+    }
+
+
+def cache_len(cfg: ModelConfig, spec: AttnSpec, max_len: int) -> int:
+    if spec.kind == "local" and spec.window:
+        return min(spec.window, max_len)
+    if spec.kind == "chunked" and spec.chunk:
+        return min(spec.chunk, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, spec: AttnSpec, batch: int, max_len: int):
+    """Decode cache: K/V slots + the absolute position stored in each slot.
+
+    kv_cache_dtype="int8" stores K/V quantized with one fp32 scale per
+    (token, kv_head) (KIVI-style per-token quantization): ~2x HBM vs bf16 —
+    what makes the qwen1.5-110b decode_32k cell fit a 16 GiB chip."""
+    L = cache_len(cfg, spec, max_len)
+    quant = getattr(cfg, "kv_cache_dtype", "bfloat16") == "int8"
+    dt = jnp.int8 if quant else dtype_of(cfg.act_dtype)
+    cache = {
+        "k": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((batch, L), -1, jnp.int32),
+    }
+    if quant:
+        cache["k_scale"] = jnp.zeros((batch, L, cfg.n_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, L, cfg.n_kv_heads), jnp.float32)
+    return cache
+
+
+def _quantize_kv(t):
+    """(..., D) -> int8 values + fp32 scale over the last dim."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale, dt):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dt)
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def _mask_logits(logits, qpos, kpos, spec: AttnSpec):
+    """logits (..., Sq, Sk) + positional mask by attention kind.
+
+    kpos may be -1 for empty cache slots (always masked)."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    ok = k >= 0
+    if spec.causal:
+        ok &= k <= q
+    if spec.kind == "local" and spec.window:
+        ok &= k > q - spec.window
+    if spec.kind == "chunked" and spec.chunk:
+        ok &= (k // spec.chunk) == (q // spec.chunk)
+    return jnp.where(ok, logits, NEG_INF)
+
+
+# Sequences at least this long route through the online-softmax blocked path
+# (prefill_32k would otherwise materialize an S^2 logit tensor). The plain
+# path remains the paper-faithful-simple baseline for train_4k.
+FLASH_MIN_SEQ = 8192
+FLASH_Q_BLOCK = 1024
+FLASH_KV_BLOCK = 2048
+
+
+def _sdpa_plain(q, k, v, qpos, kpos, spec: AttnSpec, softcap: float):
+    """q (B,Sq,H,D), k/v (B,Sk,KV,D) -> (B,Sq,H,D). GQA grouped einsum."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = _mask_logits(logits, qpos[:, None, None, :], kpos[:, None, None, :], spec)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _sdpa_blocked(
+    q,
+    k,
+    v,
+    qpos,
+    kpos,
+    spec: AttnSpec,
+    softcap: float,
+    q_block: int = FLASH_Q_BLOCK,
+    kv_block: int = FLASH_KV_BLOCK,
+):
+    """FlashAttention-style online-softmax over KV blocks inside a scan over
+    Q blocks: O(S * block) memory instead of O(S^2). Forward-only math is
+    identical to _sdpa_plain (asserted in tests)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    assert Sq % q_block == 0 and Sk % kv_block == 0, (Sq, q_block, Sk, kv_block)
+    nq, nk = Sq // q_block, Sk // kv_block
+
+    qg = (q * (1.0 / jnp.sqrt(D).astype(q.dtype))).reshape(B, nq, q_block, KV, G, D)
+    qpos_b = qpos.reshape(B, nq, q_block)
+    kb = k.reshape(B, nk, kv_block, KV, D)
+    vb = v.reshape(B, nk, kv_block, KV, D)
+    kpos_b = kpos.reshape(B, nk, kv_block)
+
+    def q_step(_, qi):
+        qblk, qp = qi  # (B,qb,KV,G,D), (B,qb)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = ki
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk).astype(jnp.float32)
+            if softcap > 0.0:
+                logits = softcap * jnp.tanh(logits / softcap)
+            logits = _mask_logits(
+                logits, qp[:, None, None, :], kp[:, None, None, :], spec
+            )
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(qblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, D), qblk.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kb, 1, 0),
+                jnp.moveaxis(vb, 1, 0),
+                jnp.moveaxis(kpos_b, 1, 0),
+            ),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, jnp.moveaxis(out, 3, 1)  # (B,qb,KV,G,D)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qpos_b, 1, 0))
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+    return out
+
+
+def _sdpa(q, k, v, qpos, kpos, spec: AttnSpec, softcap: float):
+    """Dispatch: blocked online-softmax path for long sequences."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq >= FLASH_MIN_SEQ and Sq == Sk and Sq % FLASH_Q_BLOCK == 0:
+        return _sdpa_blocked(q, k, v, qpos, kpos, spec, softcap)
+    return _sdpa_plain(q, k, v, qpos, kpos, spec, softcap)
+
+
+def _apply_rope_qk(q, k, qpos, kpos, spec: AttnSpec, head_dim: int):
+    if not spec.rope:
+        return q, k
+    cq, sq, rot = rope_angles(qpos, head_dim, spec.rope_theta, spec.rope_fraction)
+    ck, sk, _ = rope_angles(kpos, head_dim, spec.rope_theta, spec.rope_fraction)
+    return apply_rope(q, cq, sq, rot), apply_rope(k, ck, sk, rot)
+
+
+def attention(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    spec: AttnSpec,
+    positions: jnp.ndarray,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Returns (output (B,S,d_model), updated cache or None).
+
+    kv_override supplies external K/V inputs (cross-attention): K/V are
+    projected from the override source; no mask beyond validity; no cache.
+    """
+    act = dtype_of(cfg.act_dtype)
+    B, S, _ = x.shape
+    q = _split_heads(dense(params["q"], x, act), cfg.n_heads, cfg.head_dim)
+    # padded constraint: queries MUST be head-sharded even when n_heads
+    # doesn't divide TP (llama4: 40/16) — see logical_constraint_padded
+    q = logical_constraint_padded(q, "batch", "seq", "heads", None)
+
+    if kv_override is not None:
+        src, src_pos = kv_override
+        k = _split_heads(dense(params["k"], src, act), cfg.n_kv_heads, cfg.head_dim)
+        v = _split_heads(dense(params["v"], src, act), cfg.n_kv_heads, cfg.head_dim)
+        cross_spec = AttnSpec(kind="global", rope=False, causal=False)
+        out = _sdpa(q, k, v, positions, src_pos, cross_spec, spec.softcap)
+        y = dense(params["o"], out.reshape(B, S, -1), act)
+        return logical_constraint(y, "batch", "seq", "embed"), None
+
+    k = _split_heads(dense(params["k"], x, act), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(params["v"], x, act), cfg.n_kv_heads, cfg.head_dim)
+    k = logical_constraint(k, "batch", "seq", "kv_heads", None)
+    v = logical_constraint(v, "batch", "seq", "kv_heads", None)
+    q, k = _apply_rope_qk(q, k, positions, positions, spec, cfg.head_dim)
+
+    if mode == "train":
+        out = _sdpa(q, k, v, positions, positions, spec, spec.softcap)
+        y = dense(params["o"], out.reshape(B, S, -1), act)
+        return logical_constraint(y, "batch", "seq", "embed"), None
+
+    quantized = "k_scale" in (cache or {})
+
+    def write_cache(cache, k_new, v_new, pos_new, slots, bidx):
+        ckv = lambda t: logical_constraint(t, "batch", "kv_len", "kv_heads", "kv_dim")
+        out = dict(cache)
+        if quantized:
+            kq, ks = _quantize_kv(k_new)
+            vq, vs = _quantize_kv(v_new)
+            out["k"] = ckv(cache["k"].at[bidx, slots].set(kq))
+            out["v"] = ckv(cache["v"].at[bidx, slots].set(vq))
+            out["k_scale"] = cache["k_scale"].at[bidx, slots].set(ks)
+            out["v_scale"] = cache["v_scale"].at[bidx, slots].set(vs)
+        else:
+            out["k"] = ckv(cache["k"].at[bidx, slots].set(k_new.astype(cache["k"].dtype)))
+            out["v"] = ckv(cache["v"].at[bidx, slots].set(v_new.astype(cache["v"].dtype)))
+        out["pos"] = cache["pos"].at[bidx, slots].set(pos_new)
+        return out
+
+    def read_cache(cache, dt):
+        if quantized:
+            return (
+                _dequantize_kv(cache["k"], cache["k_scale"], dt),
+                _dequantize_kv(cache["v"], cache["v_scale"], dt),
+            )
+        return cache["k"].astype(dt), cache["v"].astype(dt)
+
+    if mode == "prefill":
+        assert cache is not None
+        out = _sdpa(q, k, v, positions, positions, spec, spec.softcap)
+        y = dense(params["o"], out.reshape(B, S, -1), act)
+        L = cache["k"].shape[1]
+        m = min(S, L)
+        slots = (positions[:, S - m :]) % L  # (B, m)
+        bidx = jnp.arange(B)[:, None]
+        new_cache = write_cache(
+            cache, k[:, S - m :], v[:, S - m :], positions[:, S - m :], slots, bidx
+        )
+        return logical_constraint(y, "batch", "seq", "embed"), new_cache
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        L = cache["k"].shape[1]
+        slot = (positions[:, 0] % L)[:, None]  # (B,1)
+        bidx = jnp.arange(B)[:, None]
+        new_cache = write_cache(cache, k, v, positions, slot, bidx)
+        kc, vc = read_cache(new_cache, q.dtype)
+        out = _sdpa(q, kc, vc, positions, new_cache["pos"], spec, spec.softcap)
+        y = dense(params["o"], out.reshape(B, S, -1), act)
+        y = logical_constraint(y, "batch", "seq", "embed")
+        return y, new_cache
+
+    raise ValueError(f"unknown mode {mode!r}")

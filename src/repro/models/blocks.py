@@ -1,0 +1,151 @@
+"""Composable transformer/recurrent blocks driven by BlockSpec."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+
+from .attention import attention, init_attention, init_cache
+from .layers import apply_norm, dtype_of, init_norm
+from .moe import ffn_apply, init_ffn, init_moe, moe_ffn
+from .recurrent import (
+    init_mlstm_block,
+    init_mlstm_state,
+    init_rglru_block,
+    init_rglru_state,
+    init_slstm_block,
+    init_slstm_state,
+    mlstm_block,
+    rglru_block,
+    slstm_block,
+)
+
+__all__ = ["init_block", "block_apply", "init_block_cache"]
+
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec):
+    ks = iter(jax.random.split(key, 8))
+    d = cfg.d_model
+    dt = dtype_of(cfg.param_dtype)
+    p = {"ln1": init_norm(d, cfg.norm)}
+    if spec.kind == "attn":
+        p["attn"] = init_attention(next(ks), cfg, spec.attn)
+    elif spec.kind == "rglru":
+        p["mixer"] = init_rglru_block(next(ks), cfg)
+    elif spec.kind == "mlstm":
+        p["mixer"] = init_mlstm_block(next(ks), cfg)
+    elif spec.kind == "slstm":
+        p["mixer"] = init_slstm_block(next(ks), cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.cross_attn:
+        p["ln_x"] = init_norm(d, cfg.norm)
+        p["cross"] = init_attention(next(ks), cfg, spec.attn)
+    if spec.post_norm:
+        p["ln1_post"] = init_norm(d, cfg.norm)
+    if spec.moe is not None:
+        p["ln2"] = init_norm(d, cfg.norm)
+        p["moe"] = init_moe(next(ks), cfg, spec.moe)
+    elif spec.ffn != "none":
+        p["ln2"] = init_norm(d, cfg.norm)
+        p["mlp"] = init_ffn(next(ks), d, cfg.d_ff, spec.ffn, dt)
+    if spec.post_norm and (spec.moe is not None or spec.ffn != "none"):
+        p["ln2_post"] = init_norm(d, cfg.norm)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int, max_len: int):
+    """Decode-state pytree for one block (None for stateless encoder use)."""
+    if spec.kind == "attn":
+        return {"attn": init_cache(cfg, spec.attn, batch, max_len)}
+    if spec.kind == "rglru":
+        return {"state": init_rglru_state(cfg, batch)}
+    if spec.kind == "mlstm":
+        return {"state": init_mlstm_state(cfg, batch)}
+    if spec.kind == "slstm":
+        return {"state": init_slstm_state(cfg, batch)}
+    raise ValueError(spec.kind)
+
+
+def block_apply(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    positions: jnp.ndarray,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    cross_ctx: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+
+    # --- cross-attention sublayer (vision-text), before self mixing
+    if spec.cross_attn:
+        assert cross_ctx is not None, "cross_attn block needs cross_ctx"
+        h = apply_norm(params["ln_x"], x, cfg.norm)
+        src_pos = jnp.broadcast_to(
+            jnp.arange(cross_ctx.shape[1], dtype=jnp.int32)[None],
+            (x.shape[0], cross_ctx.shape[1]),
+        )
+        y, _ = attention(
+            params["cross"],
+            h,
+            cfg,
+            spec.attn,
+            positions,
+            mode="train",
+            kv_override=(cross_ctx.astype(h.dtype), src_pos),
+        )
+        x = x + y
+
+    # --- token mixer
+    h = apply_norm(params["ln1"], x, cfg.norm)
+    if spec.kind == "attn":
+        y, c = attention(
+            params["attn"],
+            h,
+            cfg,
+            spec.attn,
+            positions,
+            mode=mode,
+            cache=None if cache is None else cache.get("attn"),
+        )
+        if c is not None:
+            new_cache["attn"] = c
+    else:
+        fn = {"rglru": rglru_block, "mlstm": mlstm_block, "slstm": slstm_block}[
+            spec.kind
+        ]
+        y, st = fn(
+            params["mixer"],
+            h,
+            cfg,
+            mode=mode,
+            state=None if cache is None else cache.get("state"),
+        )
+        if st is not None:
+            new_cache["state"] = st
+    if spec.post_norm:
+        y = apply_norm(params["ln1_post"], y, cfg.norm)
+    x = x + y
+
+    # --- FFN / MoE
+    if spec.moe is not None:
+        h = apply_norm(params["ln2"], x, cfg.norm)
+        y, aux = moe_ffn(params["moe"], h, cfg, spec.moe)
+    elif spec.ffn != "none":
+        h = apply_norm(params["ln2"], x, cfg.norm)
+        y = ffn_apply(params["mlp"], h, spec.ffn, dtype_of(cfg.act_dtype))
+    else:
+        y = None
+    if y is not None:
+        if spec.post_norm:
+            y = apply_norm(params["ln2_post"], y, cfg.norm)
+        x = x + y
+
+    return x, (new_cache if new_cache else None), aux

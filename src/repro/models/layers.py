@@ -1,0 +1,147 @@
+"""Basic layers as pure functions over explicit param pytrees.
+
+Convention: every layer exposes ``init_*(key, ...) -> params`` (nested dict of
+arrays, annotated for sharding via .logical in metadata trees) and an apply
+function. No flax — explicit trees keep scan-stacking and partitioning rules
+trivial to reason about.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partitioning import logical_constraint
+
+__all__ = [
+    "dtype_of",
+    "init_dense",
+    "dense",
+    "init_norm",
+    "apply_norm",
+    "init_embedding",
+    "rope_angles",
+    "apply_rope",
+    "cross_entropy_loss",
+]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+def init_dense(key, in_dim, out_shape, bias=False, scale=None, dtype=jnp.float32):
+    """Dense kernel of shape (in_dim, *out_shape) with fan-in init."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    fan_out = 1
+    for s in out_shape:
+        fan_out *= s
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(in_dim)
+    p = {
+        "kernel": (
+            jax.random.normal(key, (in_dim, *out_shape), dtype=jnp.float32) * scale
+        ).astype(dtype)
+    }
+    if bias:
+        p["bias"] = jnp.zeros(out_shape, dtype)
+    return p
+
+
+def dense(p, x, act_dtype=None):
+    """x @ kernel (+ bias); contraction over the last axis of x."""
+    kernel = p["kernel"]
+    if act_dtype is not None:
+        kernel = kernel.astype(act_dtype)
+        x = x.astype(act_dtype)
+    nd = kernel.ndim - 1
+    y = jax.lax.dot_general(
+        x, kernel, (((x.ndim - 1,), (0,)), ((), ()))
+    )
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def init_norm(dim, kind="rmsnorm"):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    """Normalization in float32 (mixed-precision safe), cast back to x.dtype."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(x32 * x32, -1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps)
+        scale = p["scale"]
+        if kind == "rmsnorm_p1":  # gemma: (1 + w)
+            scale = 1.0 + scale
+        y = y * scale
+    return y.astype(dt)
+
+
+def init_embedding(key, vocab, dim, dtype=jnp.float32):
+    return {
+        "table": (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(
+            dtype
+        )
+    }
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_angles(positions, head_dim, theta=10000.0, fraction=1.0):
+    """(B,S) int positions -> (B,S,rot/2) cos/sin tables.
+
+    fraction < 1 rotates only the first rot = fraction*head_dim dims
+    (stablelm partial rotary)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,rot/2)
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, cos, sin, rot):
+    """x: (B,S,H,D). Rotate first `rot` dims pairwise (interleaved halves)."""
+    if rot == 0:
+        return x
+    xr = x[..., :rot]
+    xp = x[..., rot:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2, xp], axis=-1)
+
+
+def cross_entropy_loss(logits, labels, mask=None, z_loss=1e-4):
+    """Mean token cross-entropy in fp32, with optional z-loss regularizer.
+
+    The label pick is a one-hot contraction (not take_along_axis) so that
+    vocab-sharded logits reduce locally + psum under GSPMD instead of
+    gathering the full vocab axis."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

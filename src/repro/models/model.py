@@ -1,0 +1,299 @@
+"""Top-level model: pattern-of-blocks scanned over repeats.
+
+Compile-time discipline: the repeating pattern is `lax.scan`ned with stacked
+params (one traced copy of the pattern regardless of depth — essential for the
+80-layer qwen1.5-110b dry-run); heterogeneous blocks inside one pattern repeat
+are unrolled; `tail` blocks are unrolled after the scan.
+
+`param_logical_axes` / `cache_logical_axes` produce pytrees of logical axis
+names (resolved to NamedShardings by sharding.partitioning) mirroring the
+param/cache structures — the dry-run's in_shardings come from here.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.sharding.partitioning import logical_constraint
+
+from .blocks import block_apply, init_block, init_block_cache
+from .layers import dtype_of, init_dense, init_embedding, init_norm
+
+__all__ = [
+    "init_params",
+    "param_logical_axes",
+    "init_caches",
+    "cache_logical_axes",
+    "forward",
+    "model_flops_per_token",
+]
+
+
+# ------------------------------------------------------------------- init
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_pat, k_tail, k_head = jax.random.split(key, 4)
+    dt = dtype_of(cfg.param_dtype)
+    params = {}
+    if cfg.frontend is None or cfg.frontend == "vision":
+        params["embed"] = init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dt)
+    # audio frontend: inputs arrive as precomputed frame embeddings (stub)
+
+    def init_repeat(k):
+        ks = jax.random.split(k, len(cfg.pattern))
+        return {
+            f"block{i}": init_block(ks[i], cfg, spec)
+            for i, spec in enumerate(cfg.pattern)
+        }
+
+    if cfg.n_repeats > 0:
+        params["pattern"] = jax.vmap(init_repeat)(
+            jax.random.split(k_pat, cfg.n_repeats)
+        )
+    if cfg.tail:
+        ks = jax.random.split(k_tail, len(cfg.tail))
+        params["tail"] = {
+            f"tail{i}": init_block(ks[i], cfg, spec)
+            for i, spec in enumerate(cfg.tail)
+        }
+    params["final_norm"] = init_norm(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(k_head, cfg.d_model, cfg.vocab_size, dtype=dt)
+    return params
+
+
+# ------------------------------------------------- logical axes for sharding
+_PARAM_AXES_RULES = [
+    # (path regex, ndim -> logical axes)
+    (r"embed/table", ("vocab", "fsdp")),
+    (r"head/kernel", ("fsdp", "vocab")),
+    (r"(attn|cross)/(q|k|v)/kernel", ("fsdp", "qkv")),
+    (r"(attn|cross)/(q|k|v)/bias", ("qkv",)),
+    (r"(attn|cross)/o/kernel", ("qkv", "fsdp")),
+    (r"moe/router/kernel", ("fsdp", None)),
+    (r"moe/w_(gate|up)", ("expert", "fsdp", "expert_mlp")),
+    (r"moe/w_down", ("expert", "expert_mlp", "fsdp")),
+    (r"(mlp|shared)/(gate|up)/kernel", ("fsdp", "mlp")),
+    (r"(mlp|shared)/down/kernel", ("mlp", "fsdp")),
+    (r"mixer/(in_proj|gate_proj|up_proj)/kernel", ("fsdp", "rnn")),
+    (r"mixer/(q|k|v|lru_a|lru_x|ifgate)/kernel", (None, "rnn")),
+    (r"mixer/rec_proj/kernel", (None, None, "rnn")),  # block-diagonal sLSTM
+    (r"mixer/(out_proj|down_proj)/kernel", ("rnn", "fsdp")),
+    (r"mixer/conv/kernel", (None, "rnn")),
+    (r"mixer/lambda", ("rnn",)),
+    (r"in_proj/kernel", ("fsdp", "rnn")),
+]
+
+
+def _axes_for_path(path: str, ndim: int):
+    for pat, axes in _PARAM_AXES_RULES:
+        if re.search(pat, path):
+            axes = tuple(axes)[:ndim]
+            return axes + (None,) * (ndim - len(axes))
+    return (None,) * ndim  # norms, biases, small vectors: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_logical_axes(cfg: ModelConfig):
+    """Pytree of logical-axis tuples matching init_params' structure.
+
+    Pattern-stacked leaves get a leading "stack" axis.
+    """
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+    def annotate(path, leaf):
+        p = _path_str(path)
+        stacked = p.startswith("pattern")
+        nd = leaf.ndim - (1 if stacked else 0)
+        axes = _axes_for_path(p, nd)
+        return (("stack",) + axes) if stacked else axes
+
+    return jax.tree_util.tree_map_with_path(annotate, shapes)
+
+
+# ----------------------------------------------------------------- caches
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    caches = {}
+    if cfg.n_repeats > 0:
+        def one(_):
+            return {
+                f"block{i}": init_block_cache(cfg, spec, batch, max_len)
+                for i, spec in enumerate(cfg.pattern)
+            }
+
+        caches["pattern"] = jax.vmap(one)(jnp.arange(cfg.n_repeats))
+    if cfg.tail:
+        caches["tail"] = {
+            f"tail{i}": init_block_cache(cfg, spec, batch, max_len)
+            for i, spec in enumerate(cfg.tail)
+        }
+    return caches
+
+
+def splice_cache(batched, single, slot: int):
+    """Insert a batch=1 cache (e.g. from a fresh prefill) into slot `slot` of
+    a batched cache. Pattern-stacked leaves carry a leading repeats axis, so
+    the batch axis is 1 there and 0 for tail leaves."""
+
+    def upd(path, c, n):
+        if _path_str(path).startswith("pattern"):
+            return c.at[:, slot].set(n[:, 0].astype(c.dtype))
+        return c.at[slot].set(n[0].astype(c.dtype))
+
+    return jax.tree_util.tree_map_with_path(upd, batched, single)
+
+
+_CACHE_AXES = [
+    # kv_heads and kv_dim both map to the model axis; divisibility-aware
+    # resolution picks heads when they divide TP, else head_dim (see
+    # sharding.partitioning.param_sharding).
+    (r"attn/(k|v)$", ("batch", "kv_len", "kv_heads", "kv_dim")),
+    (r"attn/(k|v)_scale$", ("batch", "kv_len", "kv_heads")),
+    (r"attn/pos$", ("batch", "kv_len")),
+    (r"state/(h|c|n|m)$", ("batch", "rnn")),
+    (r"state/conv$", ("batch", None, "rnn")),
+    (r"state/C$", ("batch", "heads", None, None)),
+]
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int, max_len: int):
+    shapes = jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+    def annotate(path, leaf):
+        p = _path_str(path)
+        stacked = p.startswith("pattern")
+        nd = leaf.ndim - (1 if stacked else 0)
+        axes = (None,) * nd
+        for pat, a in _CACHE_AXES:
+            if re.search(pat, p):
+                # mlstm n/m are (B,H)/(B,H,dh): fix up by ndim
+                a = tuple(a)[:nd]
+                axes = a + (None,) * (nd - len(a))
+                break
+        return (("stack",) + axes) if stacked else axes
+
+    return jax.tree_util.tree_map_with_path(annotate, shapes)
+
+
+# ---------------------------------------------------------------- forward
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+    mode: str = "train",
+    caches: Optional[dict] = None,
+    cross_ctx: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (logits, new_caches (None in train mode), aux_loss)."""
+    act = dtype_of(cfg.act_dtype)
+    if embeds is not None:
+        x = embeds.astype(act)
+    else:
+        x = params["embed"]["table"][tokens].astype(act)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), act)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = logical_constraint(x, "batch", "seq", "embed")
+    if cross_ctx is not None:
+        cross_ctx = cross_ctx.astype(act)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+
+    def repeat_body(carry, xs):
+        x, aux = carry
+        block_params, block_caches = xs
+        new_bc = {}
+        for i, spec in enumerate(cfg.pattern):
+            name = f"block{i}"
+            bc = None if block_caches is None else block_caches[name]
+            x, nc, a = block_apply(
+                block_params[name],
+                x,
+                cfg,
+                spec,
+                positions,
+                mode=mode,
+                cache=bc,
+                cross_ctx=cross_ctx,
+            )
+            aux = aux + a
+            if nc is not None:
+                new_bc[name] = nc
+        return (x, aux), (new_bc if new_bc else None)
+
+    if cfg.n_repeats > 0:
+        body = repeat_body
+        if mode == "train" and cfg.remat != "none":
+            policy = (
+                jax.checkpoint_policies.checkpoint_dots
+                if cfg.remat == "dots"
+                else None
+            )
+            body = jax.checkpoint(repeat_body, policy=policy)
+        xs = (params["pattern"], caches["pattern"] if caches else None)
+        (x, aux_total), pattern_caches = jax.lax.scan(body, (x, aux_total), xs)
+        if pattern_caches is not None:
+            new_caches["pattern"] = pattern_caches
+
+    for i, spec in enumerate(cfg.tail):
+        name = f"tail{i}"
+        bc = None if not caches else caches["tail"][name]
+        x, nc, a = block_apply(
+            params["tail"][name],
+            x,
+            cfg,
+            spec,
+            positions,
+            mode=mode,
+            cache=bc,
+            cross_ctx=cross_ctx,
+        )
+        aux_total = aux_total + a
+        if nc is not None:
+            new_caches.setdefault("tail", {})[name] = nc
+
+    from .layers import apply_norm  # local import to avoid cycle at module load
+
+    if mode == "prefill" and not cfg.encoder_only:
+        # serving prefill only needs next-token logits: slice before the
+        # O(S*vocab) head einsum (memory + FLOPs win at 32k x 256k vocab)
+        x = x[:, -1:]
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x.astype(act), params["embed"]["table"].astype(act)
+        )
+    else:
+        from .layers import dense
+
+        logits = dense(params["head"], x, act)
+    if cfg.logit_softcap > 0.0:
+        logits = cfg.logit_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.logit_softcap
+        )
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    return logits, (new_caches if new_caches else None), aux_total
+
+
+def model_flops_per_token(cfg: ModelConfig, train: bool = True) -> float:
+    """MODEL_FLOPS: 6*N*D per token (dense) / 6*N_active*D (MoE); 2*N for
+    forward-only (serving)."""
+    n = cfg.active_param_count()
+    return (6.0 if train else 2.0) * n

@@ -1,0 +1,410 @@
+"""Recurrent blocks: Griffin RG-LRU (recurrentgemma) and xLSTM (mLSTM/sLSTM).
+
+All three expose train/prefill (sequence-parallel where the math allows:
+associative scan for RG-LRU, quadratic gated parallel form for mLSTM, lax.scan
+for the strictly-sequential sLSTM) and an O(1)-state decode step — which is
+what makes these archs eligible for the long_500k cell.
+
+State pytrees (per layer):
+  rglru: {"h": (B,W), "conv": (B,K-1,W)}
+  mlstm: {"C": (B,H,D,D), "n": (B,H,D), "m": (B,H)}
+  slstm: {"c","n","h","m": (B,W)}
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partitioning import logical_constraint
+
+from .layers import dense, dtype_of, init_dense
+
+__all__ = [
+    "init_rglru_block",
+    "rglru_block",
+    "init_rglru_state",
+    "init_mlstm_block",
+    "mlstm_block",
+    "init_mlstm_state",
+    "init_slstm_block",
+    "slstm_block",
+    "init_slstm_state",
+]
+
+_LRU_C = 8.0
+
+
+# ============================================================ causal conv1d
+def _causal_conv(x, kernel, conv_state=None):
+    """x (B,S,W), kernel (K,W) depthwise causal conv.
+
+    conv_state (B,K-1,W) holds the trailing inputs from the previous segment;
+    returns (y, new_conv_state)."""
+    K = kernel.shape[0]
+    B, S, W = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, W), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + xp[:, i : i + S] * kernel[K - 1 - i]
+    new_state = xp[:, S:][:, -(K - 1) :] if K > 1 else conv_state
+    return y, new_state
+
+
+# ================================================================== RG-LRU
+def init_rglru_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d, w = cfg.d_model, cfg.rnn_width
+    dt = dtype_of(cfg.param_dtype)
+    # Lambda init so a = exp(-c*softplus(L)) is spread in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _LRU_C))  # softplus^-1(-log(u)/c)
+    return {
+        "in_proj": init_dense(ks[0], d, w, dtype=dt),
+        "gate_proj": init_dense(ks[1], d, w, dtype=dt),
+        "conv": {"kernel": jnp.zeros((cfg.conv1d_width, w), dt).at[-1].set(1.0)},
+        "lru_a": init_dense(ks[2], w, w, dtype=dt),
+        "lru_x": init_dense(ks[3], w, w, dtype=dt),
+        "lambda": lam.astype(dt),
+        "out_proj": init_dense(ks[4], w, d, dtype=dt),
+    }
+
+
+def _rglru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over the time axis."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(
+    params, x, cfg: ModelConfig, mode="train", state: Optional[dict] = None
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Griffin recurrent block: (gate ∥ conv1d→RG-LRU) -> multiply -> out."""
+    act = dtype_of(cfg.act_dtype)
+    gate = jax.nn.gelu(dense(params["gate_proj"], x, act))
+    u = dense(params["in_proj"], x, act)
+    u = logical_constraint(u, "batch", "seq", "rnn")
+
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, params["conv"]["kernel"].astype(act), conv_state)
+
+    # gates in fp32 for stability
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(params["lru_a"], u32))
+    i = jax.nn.sigmoid(dense(params["lru_x"], u32))
+    log_a = -_LRU_C * jax.nn.softplus(params["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u32)
+
+    if mode == "decode":
+        assert state is not None and x.shape[1] == 1
+        h_prev = state["h"].astype(jnp.float32)
+        h = a[:, 0] * h_prev + b[:, 0]
+        h_seq = h[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        h0 = state["h"] if state is not None else None
+        h_seq = _rglru_scan(a, b, h0)
+        new_state = {"h": h_seq[:, -1], "conv": new_conv} if mode == "prefill" else None
+
+    y = h_seq.astype(act) * gate
+    y = dense(params["out_proj"], y, act)
+    return logical_constraint(y, "batch", "seq", "embed"), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    w = cfg.rnn_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype_of(cfg.act_dtype)),
+    }
+
+
+# =================================================================== mLSTM
+def init_mlstm_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    d, w = cfg.d_model, cfg.rnn_width
+    dt = dtype_of(cfg.param_dtype)
+    return {
+        "up_proj": init_dense(ks[0], d, 2 * w, dtype=dt),
+        "conv": {"kernel": jnp.zeros((cfg.conv1d_width, w), dt).at[-1].set(1.0)},
+        "q": init_dense(ks[1], w, w, dtype=dt),
+        "k": init_dense(ks[2], w, w, dtype=dt),
+        "v": init_dense(ks[3], w, w, dtype=dt),
+        "ifgate": init_dense(ks[4], w, 2 * cfg.n_heads, dtype=dt),
+        "down_proj": init_dense(ks[5], w, d, dtype=dt),
+    }
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilized parallel form (B,S,H,D). Quadratic in S, causal."""
+    B, S, H, D = q.shape
+    cum_f = jnp.cumsum(log_f, axis=1)  # (B,S,H)
+    # D[t,s] = cum_f[t] - cum_f[s] + log_i[s] for s <= t
+    dmat = (
+        cum_f[:, :, None, :] - cum_f[:, None, :, :] + log_i[:, None, :, :]
+    )  # (B,Sq,Sk,H)
+    tq = jnp.arange(S)[:, None]
+    tk = jnp.arange(S)[None, :]
+    dmat = jnp.where((tk <= tq)[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # (B,S,1,H)
+    dexp = jnp.exp(dmat - m)  # stabilized
+    scores = jnp.einsum("bqhd,bkhd->bqkh", q, k)  # k pre-scaled by 1/sqrt(D)
+    wmat = scores * dexp
+    num = jnp.einsum("bqkh,bkhd->bqhd", wmat, v)
+    den = jnp.abs(jnp.sum(wmat, axis=2))  # (B,S,H)
+    den = jnp.maximum(den, jnp.exp(-m[:, :, 0, :]))
+    return num / den[..., None]
+
+
+# Sequences at least this long use the chunkwise form (the parallel form's
+# S^2 gate matrix would not fit HBM at 32k+).
+MLSTM_CHUNK_MIN_SEQ = 4096
+MLSTM_CHUNK = 1024
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int = MLSTM_CHUNK):
+    """Chunk-parallel mLSTM: intra-chunk parallel form + cross-chunk
+    recurrent (C, n, m) state. Exactly matches _mlstm_parallel (tests).
+
+    Shapes: q/k/v (B,S,H,D), gates (B,S,H). Memory O(S*chunk) not O(S^2).
+    """
+    B, S, H, D = q.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    qs, ks, vs, lis, lfs = map(resh, (q, k, v, log_i, log_f))
+
+    def step(carry, xs):
+        C, n, m_prev = carry  # (B,H,D,D), (B,H,D), (B,H)
+        qc, kc, vc, li, lf = xs
+        ell = jnp.cumsum(lf, axis=1)  # (B,chunk,H) local cumulative log f
+        # intra-chunk decay matrix
+        dmat = ell[:, :, None, :] - ell[:, None, :, :] + li[:, None, :, :]
+        tq = jnp.arange(chunk)[:, None]
+        tk = jnp.arange(chunk)[None, :]
+        dmat = jnp.where((tk <= tq)[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)  # (B,chunk,H)
+        b_inter = ell + m_prev[:, None, :]  # log weight of incoming state
+        m_t = jnp.maximum(m_intra, b_inter)  # (B,chunk,H)
+
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qc, kc)
+        w = scores * jnp.exp(dmat - m_t[:, :, None, :])
+        num = jnp.einsum("bqkh,bkhd->bqhd", w, vc)
+        den = jnp.sum(w, axis=2)  # (B,chunk,H)
+        inter_scale = jnp.exp(b_inter - m_t)  # (B,chunk,H)
+        num = num + inter_scale[..., None] * jnp.einsum("bhvk,bqhk->bqhv", C, qc)
+        den = den + inter_scale * jnp.einsum("bhk,bqhk->bqh", n, qc)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # fold this chunk into the carried state
+        ell_L = ell[:, -1, :]  # (B,H) total log f of the chunk
+        d_state = ell_L[:, None, :] - ell + li  # weight of step s in new state
+        m_state = jnp.maximum(
+            jnp.max(d_state, axis=1), ell_L + m_prev
+        )  # (B,H)
+        wgt = jnp.exp(d_state - m_state[:, None, :])  # (B,chunk,H)
+        carry_scale = jnp.exp(ell_L + m_prev - m_state)  # (B,H)
+        C_new = carry_scale[..., None, None] * C + jnp.einsum(
+            "bsh,bshv,bshk->bhvk", wgt, vc, kc
+        )
+        n_new = carry_scale[..., None] * n + jnp.einsum("bsh,bshk->bhk", wgt, kc)
+        return (C_new, n_new, m_state), h
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), (qs, ks, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, D)
+    return h, (C, n, m)
+
+
+def mlstm_block(
+    params, x, cfg: ModelConfig, mode="train", state: Optional[dict] = None
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    act = dtype_of(cfg.act_dtype)
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    w = cfg.rnn_width
+    dh = w // H
+    up = dense(params["up_proj"], x, act)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xm, params["conv"]["kernel"].astype(act), conv_state)
+    xc = jax.nn.silu(xc)
+
+    def heads(t):
+        return t.reshape(B, S, H, dh).astype(jnp.float32)
+
+    q = heads(dense(params["q"], xc))
+    k = heads(dense(params["k"], xc)) / jnp.sqrt(dh)
+    v = heads(dense(params["v"], xm))
+    gates = dense(params["ifgate"], xc.astype(jnp.float32))
+    log_i, log_fg = jnp.split(gates.reshape(B, S, 2, H), 2, axis=2)
+    log_i = log_i[:, :, 0]
+    log_f = jax.nn.log_sigmoid(log_fg[:, :, 0])
+
+    if mode == "decode":
+        assert state is not None and S == 1
+        C, n, m = state["C"], state["n"], state["m"]
+        li = log_i[:, 0]
+        lf = log_f[:, 0]
+        m_new = jnp.maximum(lf + m, li)  # (B,H)
+        fs = jnp.exp(lf + m - m_new)[..., None]
+        iS = jnp.exp(li - m_new)[..., None]
+        k0, v0, q0 = k[:, 0], v[:, 0], q[:, 0]
+        C_new = fs[..., None] * C + iS[..., None] * (v0[..., :, None] * k0[..., None, :])
+        n_new = fs * n + iS * k0
+        num = jnp.einsum("bhvk,bhk->bhv", C_new, q0)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q0)), jnp.exp(-m_new)
+        )
+        h = (num / den[..., None])[:, None]  # (B,1,H,dh)
+        new_state = {"C": C_new, "n": n_new, "m": m_new}
+    else:
+        if S >= MLSTM_CHUNK_MIN_SEQ and S % MLSTM_CHUNK == 0:
+            h, (C_new, n_new, m_new) = _mlstm_chunkwise(q, k, v, log_i, log_f)
+            new_state = (
+                {"C": C_new, "n": n_new, "m": m_new} if mode == "prefill" else None
+            )
+        else:
+            h = _mlstm_parallel(q, k, v, log_i, log_f)
+            new_state = None
+            if mode == "prefill":
+                # fold the whole prefix into the recurrent state for decoding
+                cum_f = jnp.cumsum(log_f, axis=1)
+                rev = cum_f[:, -1:, :] - cum_f  # sum_{j>t} log f_j
+                dt_ = rev + log_i  # weight of step t in final state (log)
+                m_new = jnp.max(dt_, axis=1)  # (B,H)
+                wgt = jnp.exp(dt_ - m_new[:, None])  # (B,S,H)
+                C_new = jnp.einsum("bsh,bshv,bshk->bhvk", wgt, v, k)
+                n_new = jnp.einsum("bsh,bshk->bhk", wgt, k)
+                new_state = {"C": C_new, "n": n_new, "m": m_new}
+
+    y = h.astype(act).reshape(B, S, w) * jax.nn.silu(z)
+    y = dense(params["down_proj"], y, act)
+    y = logical_constraint(y, "batch", "seq", "embed")
+    if mode == "train":
+        return y, None
+    return y, {**new_state, "conv": new_conv}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.rnn_width // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros(
+            (batch, cfg.conv1d_width - 1, cfg.rnn_width), dtype_of(cfg.act_dtype)
+        ),
+    }
+
+
+# =================================================================== sLSTM
+SLSTM_UNROLL = 16  # sequential steps unrolled per scan iteration
+
+def init_slstm_block(key, cfg: ModelConfig):
+    """Recurrent state mixing is BLOCK-DIAGONAL per head (the xLSTM paper's
+    structure): H blocks of (w/H, 4w/H) instead of a dense (w, 4w) — 1/H of
+    the per-step weight traffic in the inherently sequential scan."""
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    H = cfg.n_heads
+    wh = w // H
+    dt = dtype_of(cfg.param_dtype)
+    rec = (jax.random.normal(ks[1], (H, wh, 4 * wh), jnp.float32) / jnp.sqrt(wh)).astype(dt)
+    return {
+        "in_proj": init_dense(ks[0], d, 4 * w, dtype=dt),  # i,f,z,o pre-acts
+        "rec_proj": {"kernel": rec},  # per-head state mixing
+        "out_proj": init_dense(ks[2], w, d, dtype=dt),
+    }
+
+
+def _slstm_step(params, carry, xt):
+    """One sLSTM step with exponential gating + stabilizer state m."""
+    c, n, h, m = carry
+    B = h.shape[0]
+    rec_k = params["rec_proj"]["kernel"]
+    H, wh = rec_k.shape[0], rec_k.shape[1]
+    hh = h.reshape(B, H, wh)
+    rec = jnp.einsum("bhw,hwv->bhv", hh.astype(rec_k.dtype), rec_k)
+    # per-head (4, wh) chunks -> global (4w,) gate layout
+    rec = rec.reshape(B, H, 4, wh).transpose(0, 2, 1, 3).reshape(B, 4 * H * wh)
+    pre = xt + rec.astype(xt.dtype)  # (B, 4w)
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    log_i = i_t  # exp input gate (log-space value)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, log_i)
+    ig = jnp.exp(log_i - m_new)
+    fg = jnp.exp(log_f + m - m_new)
+    c_new = fg * c + ig * jnp.tanh(z_t)
+    n_new = fg * n + ig
+    h_new = jax.nn.sigmoid(o_t) * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(
+    params, x, cfg: ModelConfig, mode="train", state: Optional[dict] = None
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    act = dtype_of(cfg.act_dtype)
+    B, S, _ = x.shape
+    w = cfg.rnn_width or cfg.d_model
+    pre = dense(params["in_proj"], x, act).astype(jnp.float32)  # (B,S,4w)
+
+    if state is not None:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+    else:
+        z = jnp.zeros((B, w), jnp.float32)
+        carry = (z, z, z, jnp.full((B, w), -1e30, jnp.float32))
+
+    if mode == "decode":
+        assert S == 1
+        carry, h = _slstm_step(params, carry, pre[:, 0])
+        hs = h[:, None]
+    else:
+        # chunked stepping: unroll SLSTM_UNROLL steps per scan iteration so
+        # per-iteration buffer reads/writes amortize to chunk granularity
+        # (the recurrence itself stays strictly sequential).
+        U = SLSTM_UNROLL if S % SLSTM_UNROLL == 0 else 1
+
+        def chunk_step(cr, xt_chunk):  # xt_chunk (U, B, 4w)
+            hs_c = []
+            for u in range(U):
+                cr, h = _slstm_step(params, cr, xt_chunk[u])
+                hs_c.append(h)
+            return cr, jnp.stack(hs_c)
+
+        xs = jnp.swapaxes(pre, 0, 1).reshape(S // U, U, B, -1)
+        carry, hs = jax.lax.scan(chunk_step, carry, xs)
+        hs = jnp.swapaxes(hs.reshape(S, B, -1), 0, 1)
+
+    y = dense(params["out_proj"], hs.astype(act), act)
+    y = logical_constraint(y, "batch", "seq", "embed")
+    if mode == "train":
+        return y, None
+    c, n, h, m = carry
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    w = cfg.rnn_width or cfg.d_model
+    z = jnp.zeros((batch, w), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, w), -1e30, jnp.float32)}

@@ -1,0 +1,2 @@
+from .engine import Request, ServeEngine, make_prefill, make_serve_step
+from .sampling import greedy, sample_temperature, sample_topk

@@ -1,0 +1,152 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed decode batch of `max_slots` runs every step; requests stream in and
+out of slots independently (vLLM-style continuous batching, slot-granular):
+
+  submit()  - prefill the prompt at batch=1, splice its cache into the slot;
+  step()    - one batched decode for every active slot; finished requests
+              (eos / max_tokens) free their slots immediately.
+
+The jitted decode function is exactly the `serve_step` that the multi-pod
+dry-run lowers for the decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, init_caches
+from repro.models.model import splice_cache
+
+from .sampling import greedy
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list
+    max_tokens: int
+    eos_id: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, caches, tokens (B,1), positions (B,)) -> (logits, caches)."""
+
+    def serve_step(params, caches, tokens, positions):
+        logits, new_caches, _ = forward(
+            params,
+            cfg,
+            tokens=tokens,
+            positions=positions[:, None],
+            mode="decode",
+            caches=caches,
+        )
+        return logits[:, 0], new_caches
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, caches, tokens):
+        logits, new_caches, _ = forward(
+            params, cfg, tokens=tokens, mode="prefill", caches=caches
+        )
+        return logits[:, -1], new_caches
+
+    return prefill
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_slots: int = 4,
+        max_len: int = 256,
+        sampler: Callable = greedy,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.sampler = sampler
+        self.caches = init_caches(cfg, max_slots, max_len)
+        self.positions = jnp.zeros((max_slots,), jnp.int32)
+        self.last_token = jnp.zeros((max_slots,), jnp.int32)
+        self.active = [False] * max_slots
+        self.requests: Dict[int, Request] = {}
+        self.slot_to_uid: List[Optional[int]] = [None] * max_slots
+        self._decode = jax.jit(make_serve_step(cfg))
+        self._prefill = jax.jit(make_prefill(cfg))
+
+    # ------------------------------------------------------------ requests
+    def submit(self, req: Request) -> bool:
+        """Prefill into a free slot; False if engine is full or uid known."""
+        if req.uid in self.requests and not self.requests[req.uid].done:
+            return False  # already in flight
+        if req.done:
+            return False
+        try:
+            slot = self.active.index(False)
+        except ValueError:
+            return False
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        one_cache = init_caches(self.cfg, 1, self.max_len)
+        last_logits, one_cache = self._prefill(self.params, one_cache, toks)
+        # splice the single-request cache into the batched slot
+        self.caches = splice_cache(self.caches, one_cache, slot)
+        nxt = self.sampler(last_logits)[0]
+        self.positions = self.positions.at[slot].set(len(req.prompt))
+        self.last_token = self.last_token.at[slot].set(nxt)
+        req.generated.append(int(nxt))
+        req.slot = slot
+        self.active[slot] = True
+        self.slot_to_uid[slot] = req.uid
+        self.requests[req.uid] = req
+        return True
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> List[Request]:
+        """One batched decode step; returns requests finished this step."""
+        if not any(self.active):
+            return []
+        logits, self.caches = self._decode(
+            self.params, self.caches, self.last_token[:, None], self.positions
+        )
+        nxt = self.sampler(logits)
+        self.positions = self.positions + jnp.asarray(
+            [1 if a else 0 for a in self.active], jnp.int32
+        )
+        self.last_token = jnp.where(
+            jnp.asarray(self.active), nxt, self.last_token
+        )
+        finished = []
+        for slot, uid in enumerate(self.slot_to_uid):
+            if uid is None or not self.active[slot]:
+                continue
+            req = self.requests[uid]
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            hit_eos = tok == req.eos_id
+            hit_max = len(req.generated) >= req.max_tokens
+            if hit_eos or hit_max or int(self.positions[slot]) >= self.max_len - 1:
+                req.done = True
+                self.active[slot] = False
+                self.slot_to_uid[slot] = None
+                finished.append(req)
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not any(self.active):
+                return
+            self.step()

@@ -1,0 +1,25 @@
+"""Token sampling strategies for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["greedy", "sample_temperature", "sample_topk"]
+
+
+def greedy(logits: jnp.ndarray, key=None) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_temperature(logits: jnp.ndarray, key, temperature: float = 1.0):
+    return jax.random.categorical(key, logits / max(temperature, 1e-4)).astype(
+        jnp.int32
+    )
+
+
+def sample_topk(logits: jnp.ndarray, key, k: int = 40, temperature: float = 1.0):
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(key, vals / max(temperature, 1e-4))
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0].astype(
+        jnp.int32
+    )

@@ -1,0 +1,3 @@
+from .optimizer import OptConfig, adamw_init, adamw_update, lr_at_step
+from .train_step import init_train_state, loss_fn, make_train_step
+from .trainer import Trainer

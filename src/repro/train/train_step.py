@@ -1,0 +1,120 @@
+"""train_step: microbatch gradient accumulation (lax.scan) + AdamW.
+
+The accumulation scan is what lets the 1M-token train_4k step fit HBM on the
+big dense archs (per-shard microbatch of 1 with full remat inside the layer
+scan). Metrics are fp32 scalars.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.models.layers import cross_entropy_loss
+
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+__all__ = ["loss_fn", "make_train_step", "init_train_state"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch, cast_params: bool = True):
+    """batch keys: tokens|embeds, labels, optional cross_ctx, loss_mask.
+
+    cast_params: cast fp32 weight matrices to the activation dtype BEFORE the
+    forward pass so FSDP all-gathers move bf16, not fp32 (halves the
+    param-gather collective bytes; the cast's transpose accumulates grads back
+    in fp32). Master weights stay fp32 in the optimizer.
+    """
+    from repro.models.layers import dtype_of
+
+    act = dtype_of(cfg.act_dtype)
+    if cast_params and act != jnp.float32:
+        params = jax.tree.map(
+            lambda p: p.astype(act)
+            if (p.dtype == jnp.float32 and p.ndim >= 2)
+            else p,
+            params,
+        )
+    kw = {}
+    if "tokens" in batch:
+        kw["tokens"] = batch["tokens"]
+    if "embeds" in batch:
+        kw["embeds"] = batch["embeds"]
+    if "cross_ctx" in batch:
+        kw["cross_ctx"] = batch["cross_ctx"]
+    logits, _, aux = forward(params, cfg, mode="train", **kw)
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_train_state(params):
+    return adamw_init(params)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, donate: bool = True):
+    """Builds the jit-able train_step(params, opt_state, batch) function.
+
+    Gradient accumulation: the global batch's leading dim is split into
+    cfg.grad_accum microbatches scanned sequentially, grads accumulated fp32.
+    The accumulator carry is sharding-constrained to the params' logical axes
+    so per-microbatch DP reduction lowers to reduce-scatter into the FSDP
+    shard instead of a full all-reduce of replicated gradients.
+    """
+    accum = max(1, cfg.grad_accum)
+
+    def grads_of(params, batch):
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, batch)
+        return l, m, g
+
+    def _constrain_like_params(tree):
+        from repro.models import param_logical_axes
+        from repro.sharding.partitioning import current_rules, logical_constraint
+
+        if current_rules() is None:
+            return tree
+        axes = param_logical_axes(cfg)
+        return jax.tree.map(
+            lambda t, a: logical_constraint(t, *a),
+            tree,
+            axes,
+            is_leaf=lambda x: not isinstance(x, dict),
+        )
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = _constrain_like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                l, m, g = grads_of(params, mb)
+                g_acc = _constrain_like_params(
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                )
+                return (g_acc, l_acc + l), m["ce"]
+
+            (g_sum, l_sum), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum, g_sum)
+            loss = l_sum / accum
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg
+        )
+        out_metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_opt, out_metrics
+
+    return train_step

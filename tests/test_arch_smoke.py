@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train-ish
+step on CPU; assert output shapes and no NaNs. Decode smoke for decoder archs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, all_cells, get_smoke_config
+from repro.models import forward, init_caches, init_params
+from repro.models.layers import cross_entropy_loss
+
+
+def _inputs(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 3)
+    kw = {}
+    if cfg.frontend == "audio":
+        kw["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model), jnp.float32)
+    else:
+        kw["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    if cfg.frontend == "vision":
+        kw["cross_ctx"] = jax.random.normal(
+            ks[1], (B, cfg.cross_attn_tokens, cfg.d_model), jnp.float32
+        )
+    return kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kw = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, caches, aux = forward(params, cfg, mode="train", **kw)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert caches is None
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_reduces_loss_direction(arch):
+    """One SGD step on a fixed batch must produce finite grads that change
+    the loss (sanity of the whole backward pass per arch family)."""
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kw = _inputs(cfg, jax.random.PRNGKey(1))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
+
+    def loss_fn(p):
+        logits, _, aux = forward(p, cfg, mode="train", **kw)
+        return cross_entropy_loss(logits, labels) + aux
+
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(l0))
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
+    lr = 1e-2 / max(float(gnorm), 1.0)
+    p2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    l1 = loss_fn(p2)
+    assert bool(jnp.isfinite(l1))
+    assert float(l1) < float(l0) + 1e-3  # non-increasing within tolerance
+
+
+def _dropless(cfg):
+    """GShard einsum dispatch drops tokens past expert capacity — a real
+    property of the baseline MoE, not a bug. For exact prefill/decode
+    equivalence checks, raise capacity to the dropless regime."""
+    import dataclasses
+
+    new_pattern = []
+    for b in cfg.pattern:
+        if b.moe is not None:
+            b = dataclasses.replace(
+                b, moe=dataclasses.replace(b.moe, capacity_factor=8.0)
+            )
+        new_pattern.append(b)
+    return dataclasses.replace(cfg, pattern=tuple(new_pattern))
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCHS if a != "hubert-xlarge"]
+)
+def test_prefill_decode_consistency(arch):
+    """prefill(S) + decode(1) must equal full forward at the last position."""
+    cfg = _dropless(get_smoke_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    kw = _inputs(cfg, jax.random.PRNGKey(1), B, S)
+    caches = init_caches(cfg, B, 64)
+    lp, caches, _ = forward(params, cfg, mode="prefill", caches=caches, **kw)
+    nxt = jnp.argmax(lp[:, -1], -1)[:, None]
+    pos = jnp.full((B, 1), S, jnp.int32)
+    kw_dec = dict(kw)
+    kw_dec["tokens"] = nxt
+    ld, _, _ = forward(
+        params, cfg, mode="decode", caches=caches, positions=pos, **kw_dec
+    )
+    toks = jnp.concatenate([kw["tokens"], nxt], 1)
+    kw_full = dict(kw)
+    kw_full["tokens"] = toks
+    lf, _, _ = forward(params, cfg, mode="train", **kw_full)
+    assert float(jnp.max(jnp.abs(lf[:, -1] - ld[:, 0]))) < 5e-2
+
+
+def test_cell_skip_table():
+    runnable, skipped = all_cells()
+    assert len(runnable) + len(skipped) == len(ARCHS) * len(SHAPES) == 40
+    assert len(runnable) == 31
+    skipped_names = {(a, s) for a, s, _ in skipped}
+    assert ("hubert-xlarge", "decode_32k") in skipped_names
+    assert ("xlstm-350m", "long_500k") not in skipped_names
+    assert ("recurrentgemma-9b", "long_500k") not in skipped_names
+    assert ("qwen1.5-110b", "long_500k") in skipped_names
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates(arch):
+    """Full configs build (dataclass level) and report sane param counts."""
+    from repro.configs.registry import get_config
+
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    assert n > 1e8 or arch == "xlstm-350m"
+    assert cfg.n_layers == {
+        "llama-3.2-vision-11b": 40,
+        "yi-6b": 32,
+        "stablelm-1.6b": 24,
+        "qwen1.5-110b": 80,
+        "gemma2-9b": 42,
+        "xlstm-350m": 24,
+        "qwen2-moe-a2.7b": 24,
+        "llama4-scout-17b-a16e": 48,
+        "hubert-xlarge": 48,
+        "recurrentgemma-9b": 38,
+    }[arch]

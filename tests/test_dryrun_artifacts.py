@@ -1,0 +1,58 @@
+"""Sweep-integrity: if dry-run artifacts exist, every (arch x shape x mesh)
+cell must be present and either ok or rule-skipped — a failed cell is a bug
+in the system (the assignment's contract). Skipped when the sweep hasn't
+been run in this checkout."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, cell_skip_reason
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun")
+
+
+@pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "*.json")),
+    reason="dry-run sweep not present (run repro.launch.dryrun --both-meshes)",
+)
+def test_all_cells_present_and_clean():
+    meshes = ("16x16", "2x16x16")
+    missing, errored, mismatched = [], [], []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in meshes:
+                path = os.path.join(RESULTS, f"{arch}__{shape}__{mesh}.json")
+                if not os.path.exists(path):
+                    missing.append((arch, shape, mesh))
+                    continue
+                rec = json.load(open(path))
+                want_skip = cell_skip_reason(arch, shape)
+                if rec["status"] == "error":
+                    errored.append((arch, shape, mesh, rec.get("error", "")[:80]))
+                elif want_skip and rec["status"] != "skipped":
+                    mismatched.append((arch, shape, mesh, "should be skipped"))
+                elif not want_skip and rec["status"] != "ok":
+                    mismatched.append((arch, shape, mesh, rec["status"]))
+    assert not missing, missing
+    assert not errored, errored
+    assert not mismatched, mismatched
+
+
+@pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "*.json")),
+    reason="dry-run sweep not present",
+)
+def test_ok_cells_have_roofline_terms():
+    for path in glob.glob(os.path.join(RESULTS, "*.json")):
+        rec = json.load(open(path))
+        if rec["status"] != "ok":
+            continue
+        rf = rec["roofline"]
+        assert rf["compute_s"] >= 0 and rf["memory_s"] > 0
+        assert rf["dominant"] in ("compute", "memory", "collective")
+        assert rec["memory"]["temp_size_in_bytes"] >= 0
+        assert rec["chips"] in (256, 512)

@@ -1,0 +1,61 @@
+"""int8 KV-cache (KIVI-style per-token scales): decode consistency within
+quantization tolerance + the 2x memory claim."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models import forward, init_caches, init_params
+
+
+def _cfg():
+    return dataclasses.replace(get_smoke_config("yi-6b"), kv_cache_dtype="int8")
+
+
+def test_cache_layout_and_size():
+    cfg = _cfg()
+    c8 = init_caches(cfg, 2, 64)
+    cbf = init_caches(get_smoke_config("yi-6b"), 2, 64)
+    leaf8 = jax.tree.leaves(c8)
+    b8 = sum(x.size * x.dtype.itemsize for x in leaf8)
+    bbf = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cbf))
+    # int8 + fp32/D scales ~= (1 + 4/head_dim)/2 of bf16
+    assert b8 < 0.75 * bbf, (b8, bbf)
+    assert any(x.dtype == jnp.int8 for x in leaf8)
+
+
+def test_quantized_decode_close_to_exact():
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+
+    def rollout(c):
+        caches = init_caches(c, 2, 64)
+        lp, caches, _ = forward(params, c, tokens=tokens, mode="prefill", caches=caches)
+        nxt = jnp.argmax(lp[:, -1], -1)[:, None]
+        ld, _, _ = forward(
+            params, c, tokens=nxt,
+            positions=jnp.full((2, 1), 16, jnp.int32), mode="decode", caches=caches,
+        )
+        return lp, ld
+
+    lp8, ld8 = rollout(cfg)
+    lpb, ldb = rollout(get_smoke_config("yi-6b"))
+    # prefill logits identical (quantization only affects the stored cache)
+    np.testing.assert_allclose(np.asarray(lp8), np.asarray(lpb), atol=1e-5)
+    # decode logits within int8 quantization tolerance
+    assert float(jnp.max(jnp.abs(ld8 - ldb))) < 0.15
+
+
+def test_scales_written_on_prefill():
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    caches = init_caches(cfg, 2, 32)
+    _, caches, _ = forward(params, cfg, tokens=tokens, mode="prefill", caches=caches)
+    ks = caches["pattern"]["block0"]["attn"]["k_scale"]
+    assert float(jnp.max(ks)) > 0.0  # populated
+    assert float(jnp.min(ks[:, :, :8])) > 0.0  # every written slot has a scale
