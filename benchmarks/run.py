@@ -1,17 +1,119 @@
 """Benchmark harness: one module per paper table/figure + the kernel
-hillclimb + LM substrate micro-benches. Prints ``name,us_per_call,derived``
-CSV. The multi-pod roofline table is produced by repro.launch.roofline from
-the dry-run artifacts (results/dryrun)."""
+hillclimb + the multi-frame throughput bench + LM substrate micro-benches.
+Prints ``name,us_per_call,derived`` CSV, writes a ``BENCH_<timestamp>.json``
+snapshot at the repo root, and (with ``--quick``) fails if any row regressed
+more than 2x against the newest committed snapshot. The multi-pod roofline
+table is produced by repro.launch.roofline from the dry-run artifacts
+(results/dryrun)."""
 import argparse
+import glob
+import json
+import os
 import sys
+import time
 import traceback
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:  # allow `python benchmarks/run.py` from anywhere
+    sys.path.insert(0, REPO_ROOT)
+
+# Regressions are only flagged on rows slower than this floor: sub-100us rows
+# are dominated by timer/dispatch jitter, not by the code under test.
+REGRESSION_MIN_US = 100.0
+REGRESSION_RATIO = 2.0
+
+
+def _machine_fingerprint() -> str:
+    import platform
+
+    return f"{platform.machine()}-{os.cpu_count()}cpu"
+
+
+def _load_baseline(quick: bool):
+    """Newest comparable committed BENCH_*.json, or None.
+
+    Comparable means: same --quick mode (several benches reuse row names
+    between quick and full sweeps at very different sizes) and same machine
+    fingerprint (absolute wall-clock on foreign hardware says nothing about
+    the code — a 2x-slower CI runner is not a regression). Only git-tracked
+    snapshots count as baselines ("vs the newest *committed* snapshot"): an
+    uncommitted snapshot from the previous local run must not silently
+    re-baseline the gate. The on-disk glob is used only when git itself is
+    unavailable.
+    """
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "BENCH_*.json"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            text=True,
+            timeout=30,
+        )
+        paths = sorted(os.path.join(REPO_ROOT, p) for p in out.stdout.split())
+    except (OSError, subprocess.SubprocessError):
+        paths = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
+    fingerprint = _machine_fingerprint()
+    for path in reversed(paths):
+        try:
+            with open(path) as f:
+                snap = json.load(f)
+            if bool(snap.get("quick")) != quick:
+                continue
+            if snap.get("host") != fingerprint:
+                continue
+            return path, {r["name"]: r for r in snap.get("rows", [])}
+        except (OSError, json.JSONDecodeError, KeyError, TypeError):
+            continue
+    return None, None
+
+
+def _write_snapshot(rows, args):
+    ts = time.strftime("%Y%m%d_%H%M%S")
+    path = os.path.join(REPO_ROOT, f"BENCH_{ts}.json")
+    snap = {
+        "timestamp": ts,
+        "quick": bool(args.quick),
+        "only": args.only,
+        "host": _machine_fingerprint(),
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": derived}
+            for n, us, derived in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1)
+    return path
+
+
+def _check_regressions(rows, baseline_rows):
+    """Rows >2x slower than the same-named baseline row. Returns failures."""
+    failures = []
+    for name, us, _ in rows:
+        old = baseline_rows.get(name)
+        if old is None:
+            continue
+        old_us = old.get("us_per_call")
+        if not isinstance(old_us, (int, float)) or old_us < REGRESSION_MIN_US:
+            continue
+        if us > REGRESSION_RATIO * old_us:
+            failures.append((name, old_us, us))
+    return failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced sweep sizes")
     ap.add_argument(
-        "--only", default=None, help="comma list: tables,quality,kernels,lm"
+        "--only",
+        default=None,
+        help="comma list: tables,quality,kernels,throughput,lm",
+    )
+    ap.add_argument(
+        "--no-snapshot",
+        action="store_true",
+        help="skip writing the BENCH_<timestamp>.json snapshot",
     )
     args, _ = ap.parse_known_args()
 
@@ -19,6 +121,7 @@ def main() -> None:
         bench_bg_kernels,
         bench_bg_quality,
         bench_bg_tables,
+        bench_bg_throughput,
         bench_lm,
         bench_roofline,
     )
@@ -27,6 +130,7 @@ def main() -> None:
         "tables": bench_bg_tables,
         "quality": bench_bg_quality,
         "kernels": bench_bg_kernels,
+        "throughput": bench_bg_throughput,
         "lm": bench_lm,
         "roofline": bench_roofline,
     }
@@ -34,17 +138,38 @@ def main() -> None:
         keep = set(args.only.split(","))
         modules = {k: v for k, v in modules.items() if k in keep}
 
+    # resolve the baseline BEFORE writing this run's snapshot
+    baseline_path, baseline_rows = _load_baseline(quick=bool(args.quick))
+
     print("name,us_per_call,derived")
     failed = False
+    rows = []
     for name, mod in modules.items():
         try:
             for row in mod.run(quick=args.quick):
                 bench, us, derived = row
+                rows.append((bench, us, derived))
                 print(f"{bench},{us:.1f},{derived}", flush=True)
         except Exception:
             failed = True
             print(f"{name},ERROR,see stderr", flush=True)
             traceback.print_exc()
+
+    if rows and not args.no_snapshot:
+        snap_path = _write_snapshot(rows, args)
+        print(f"# snapshot: {os.path.relpath(snap_path, REPO_ROOT)}", flush=True)
+
+    if args.quick and baseline_rows is not None:
+        regressions = _check_regressions(rows, baseline_rows)
+        for name, old_us, new_us in regressions:
+            print(
+                f"# REGRESSION {name}: {old_us:.1f}us -> {new_us:.1f}us "
+                f"(>{REGRESSION_RATIO:.0f}x vs {os.path.basename(baseline_path)})",
+                flush=True,
+            )
+        if regressions:
+            failed = True
+
     sys.exit(1 if failed else 0)
 
 

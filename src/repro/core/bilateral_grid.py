@@ -34,6 +34,7 @@ import numpy as np
 
 __all__ = [
     "BGConfig",
+    "conv3_axis",
     "gaussian_taps",
     "grid_shape",
     "grid_create",
@@ -165,8 +166,15 @@ def grid_create(image: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
 # GF — 3x3x3 Gaussian filter on the grid
 # --------------------------------------------------------------------------
 
-def _conv3_axis(x: jnp.ndarray, taps: jnp.ndarray, axis: int) -> jnp.ndarray:
-    """Width-3 conv along ``axis`` with zero boundary (paper's implicit border)."""
+def conv3_axis(x: jnp.ndarray, taps, axis: int) -> jnp.ndarray:
+    """Width-3 conv along ``axis`` with zero boundary (paper's implicit border).
+
+    This is the single shared GF building block (also re-exported through
+    ``repro.kernels.common``). It is layout-agnostic: ``axis`` is a position in
+    whatever layout the caller uses — (gx, gy, gz, 2) here, (..., gz, gy) in
+    the TPU kernels, (gy, gz, 2) in the streaming scan — so the caller's
+    comment, not this helper, names which grid axis is being blurred.
+    """
     lo = jnp.roll(x, 1, axis=axis)
     hi = jnp.roll(x, -1, axis=axis)
     # zero the wrapped-around slices
@@ -189,8 +197,8 @@ def grid_blur(grid: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
     """
     taps = gaussian_taps(cfg)
     out = grid
-    for axis in range(3):
-        out = _conv3_axis(out, taps, axis)
+    for axis in range(3):  # grid layout (gx, gy, gz, 2): axes 0/1/2 = x/y/z
+        out = conv3_axis(out, taps, axis)
     return out
 
 

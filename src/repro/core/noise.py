@@ -12,7 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["synthetic_image", "add_gaussian_noise", "NOISE_SIGMA_PAPER"]
+__all__ = [
+    "synthetic_image",
+    "synthetic_batch",
+    "add_gaussian_noise",
+    "NOISE_SIGMA_PAPER",
+]
 
 NOISE_SIGMA_PAPER = 30.0
 
@@ -50,6 +55,18 @@ def synthetic_image(h: int = 256, w: int = 384, seed: int = 0) -> jnp.ndarray:
     img = img + 12.0 * np.sin(2 * np.pi * u * 1.7) * np.cos(2 * np.pi * v * 1.3)
 
     return jnp.asarray(np.clip(img, 0.0, 255.0), dtype=jnp.float32)
+
+
+def synthetic_batch(
+    b: int, h: int = 256, w: int = 384, seed: int = 0
+) -> jnp.ndarray:
+    """(b, h, w) stack of distinct synthetic scenes (seeds seed..seed+b-1).
+
+    The multi-frame input for the batched throughput path: every frame has
+    different object layouts, so batched filtering is exercised on genuinely
+    independent content rather than a broadcast frame.
+    """
+    return jnp.stack([synthetic_image(h, w, seed=seed + i) for i in range(b)])
 
 
 def add_gaussian_noise(

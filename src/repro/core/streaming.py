@@ -26,7 +26,7 @@ import numpy as np
 
 from .bilateral_grid import (
     BGConfig,
-    _conv3_axis,
+    conv3_axis,
     _round_half_up,
     _trilerp_weights,
     gaussian_taps,
@@ -40,7 +40,22 @@ __all__ = ["bilateral_grid_filter_streaming"]
 def bilateral_grid_filter_streaming(
     image: jnp.ndarray, cfg: BGConfig, quantize_output: bool = True
 ) -> jnp.ndarray:
-    """Stripe-streaming BG; numerically equivalent to bilateral_grid_filter."""
+    """Stripe-streaming BG; numerically equivalent to bilateral_grid_filter.
+
+    Accepts a single (h, w) frame or a (b, h, w) batch; batches are vmapped
+    over the scan (the per-frame working set stays O(grid planes + r lines),
+    so b frames stream in parallel with a b x working-set footprint).
+    """
+    if image.ndim == 3:
+        return jax.vmap(
+            lambda im: _streaming_single(im, cfg, quantize_output)
+        )(image)
+    return _streaming_single(image, cfg, quantize_output)
+
+
+def _streaming_single(
+    image: jnp.ndarray, cfg: BGConfig, quantize_output: bool
+) -> jnp.ndarray:
     image = image.astype(jnp.float32)
     h, w = image.shape
     r = cfg.r
@@ -82,8 +97,8 @@ def bilateral_grid_filter_streaming(
     def blur_plane(r2, r1, r0):
         """3x3x3 blur of the middle raw plane given (prev, mid, next) planes."""
         mix = taps[0] * r2 + taps[1] * r1 + taps[2] * r0  # x-axis conv
-        mix = _conv3_axis(mix, taps, 0)  # y axis
-        mix = _conv3_axis(mix, taps, 1)  # z axis
+        mix = conv3_axis(mix, taps, 0)  # y axis
+        mix = conv3_axis(mix, taps, 1)  # z axis
         return mix  # (gy, gz, 2) homogeneous
 
     def normalize(b):

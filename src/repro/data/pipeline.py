@@ -24,14 +24,17 @@ __all__ = ["denoise_batch", "patchify_embed", "vlm_preprocess", "spectrogram_den
 def denoise_batch(
     images: jnp.ndarray, cfg: BGConfig, use_kernels: bool = False
 ) -> jnp.ndarray:
-    """(B, H, W) noisy [0,255] -> denoised, via vmapped BG pipeline."""
+    """(B, H, W) noisy [0,255] -> denoised batch.
+
+    use_kernels=True feeds the whole batch to the fused Pallas macro-pipeline
+    in one dispatch (its native (batch, stripe) grid — constants shared, grid
+    in VMEM); the jnp reference path is vmapped per frame.
+    """
     if use_kernels:
         from repro.kernels import bilateral_grid_filter_pallas
 
-        fn = lambda im: bilateral_grid_filter_pallas(im, cfg)
-    else:
-        fn = lambda im: bilateral_grid_filter(im, cfg)
-    return jax.vmap(fn)(images)
+        return bilateral_grid_filter_pallas(images, cfg)
+    return jax.vmap(lambda im: bilateral_grid_filter(im, cfg))(images)
 
 
 def patchify_embed(

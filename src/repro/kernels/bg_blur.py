@@ -17,25 +17,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import BGConfig, default_interpret, grid_shape, taps_np
+from .common import BGConfig, conv3_axis, default_interpret, grid_shape, taps_np
 
 __all__ = ["bg_blur_kernel_call"]
-
-
-def _shift_zero(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
-    """Roll with zero fill (width-3 conv neighbor along one axis)."""
-    rolled = jnp.roll(x, shift, axis=axis)
-    idx = [slice(None)] * x.ndim
-    idx[axis] = slice(0, 1) if shift == 1 else slice(-1, None)
-    return rolled.at[tuple(idx)].set(0.0)
-
-
-def _conv3(x: jnp.ndarray, taps, axis: int) -> jnp.ndarray:
-    return (
-        taps[0] * _shift_zero(x, 1, axis)
-        + taps[1] * x
-        + taps[2] * _shift_zero(x, -1, axis)
-    )
 
 
 def _kernel(prev_ref, cur_ref, next_ref, out_ref, *, taps, gx):
@@ -46,8 +30,8 @@ def _kernel(prev_ref, cur_ref, next_ref, out_ref, *, taps, gx):
     prev = jnp.where(s == 0, jnp.zeros_like(prev), prev)
     nxt = jnp.where(s == gx - 1, jnp.zeros_like(nxt), nxt)
     mix = taps[0] * prev + taps[1] * cur + taps[2] * nxt  # x-axis
-    mix = _conv3(mix, taps, 1)  # z axis (sublanes)
-    mix = _conv3(mix, taps, 2)  # y axis (lanes)
+    mix = conv3_axis(mix, taps, 1)  # z axis (sublanes)
+    mix = conv3_axis(mix, taps, 2)  # y axis (lanes)
     out_ref[...] = mix[None]
 
 

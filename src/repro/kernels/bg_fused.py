@@ -1,4 +1,5 @@
-"""Fused GC||GF||TI Pallas kernel — the paper's macro-pipeline on a TPU.
+"""Fused GC||GF||TI Pallas kernel — the paper's macro-pipeline on a TPU,
+batched over frames.
 
 The FPGA's headline trick (Fig. 4) is that grid creation of stripe x, the
 Gaussian filter of plane x-1 and the trilinear slice of stripe x-2 run
@@ -11,13 +12,38 @@ exactly that working set:
             GF(plane s-1) <-  raw planes s-2, s-1, s       (scratch B1)
             TI(stripe s-2) <- blurred planes s-2, s-1      (line buf S*)
 
+Throughput path — the `(batch, stripe)` grid layout
+---------------------------------------------------
+`bg_fused_kernel_call` accepts a single `(h, w)` frame or a `(b, h, w)` batch.
+Batches run through a 2-D grid `(num_batch_tiles, n_stripes + 2)`; the stripe
+dimension is minor (innermost), so for each batch tile the kernel sweeps all
+stripes before advancing to the next tile. Each step's block covers
+`batch_tile` frames, i.e. every per-step tensor gains a leading frame axis and
+the GC / TI contractions become larger, MXU-friendlier matmuls:
+
+  * GC: the `(bt, r, w, gz)` one-hot z-reduction for *both* homogeneous
+    channels and *all* stripe rows is a single `(bt*2*r*gz, w) x (w, gy)`
+    contraction (one dot instead of four), followed by a static row-split sum
+    onto planes s / s+1.
+  * TI: the four per-corner y-gather matmuls collapse into one
+    `(2*bt*gz, gy) x (gy, 2*w)` contraction against the stacked floor/ceil
+    column one-hots; the x/y lerp weights are folded before the z contraction.
+
+Per-batch scratch reset: the working set in VMEM persists across grid steps,
+so the kernel re-zeroes all six scratch buffers at stripe 0 of every batch
+tile (`pl.when(s == 0)`) — frames in different tiles never mix, and a batch
+never round-trips the grid through HBM. Constant operands (column one-hots,
+interpolation fractions) are passed once and shared by every frame, unlike an
+outer `vmap`, which would replicate them per frame.
+
 HBM traffic is therefore one image read + one image write + nothing else —
 the grid never leaves VMEM, which is the paper's "low memory footprint"
 property translated to the TPU memory hierarchy. Output stripes are written
 through the revisited output block (last write wins for the warm-up steps).
 
 Paper normalization mode (eq. 4) only; r*gz is bounded (see common.py), so
-per-step temporaries are O(r*gz*w) ~ hundreds of KB.
+per-step temporaries are O(bt*r*gz*w) — a few MB for full-HD frames at the
+default batch tile.
 """
 from __future__ import annotations
 
@@ -31,6 +57,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import (
     BGConfig,
+    conv3_axis,
     default_interpret,
     gc_col_onehot,
     gc_row_split,
@@ -39,27 +66,19 @@ from .common import (
     ti_col_onehots,
 )
 
-__all__ = ["bg_fused_kernel_call"]
+__all__ = ["bg_fused_kernel_call", "DEFAULT_BATCH_TILE"]
 
-
-def _conv3_axis(x, taps, axis):
-    lo = jnp.roll(x, 1, axis=axis)
-    hi = jnp.roll(x, -1, axis=axis)
-    idx0 = [slice(None)] * x.ndim
-    idx0[axis] = slice(0, 1)
-    idx1 = [slice(None)] * x.ndim
-    idx1[axis] = slice(-1, None)
-    lo = lo.at[tuple(idx0)].set(0.0)
-    hi = hi.at[tuple(idx1)].set(0.0)
-    return taps[0] * lo + taps[1] * x + taps[2] * hi
+# Frames per grid step. Bounded so the per-step working set (one-hot
+# z-reductions + two raw-plane stripes per frame) stays well under VMEM for
+# full-HD rows; raise per-call via `batch_tile=` on smaller frames.
+DEFAULT_BATCH_TILE = 4
 
 
 def _kernel(
     img_ref,
     msk_ref,
     col_ref,
-    oh0_ref,
-    oh1_ref,
+    yoh_ref,
     yf_ref,
     xf_ref,
     out_ref,
@@ -76,15 +95,17 @@ def _kernel(
     split,
     n_stripes,
 ):
-    s = pl.program_id(0)
-    col_oh = col_ref[...]
-    y_oh0 = oh0_ref[...]
-    y_oh1 = oh1_ref[...]
+    s = pl.program_id(1)  # stripe index (minor grid dim; program_id(0) = tile)
+    col_oh = col_ref[...]  # (w, gy)
+    y_oh = yoh_ref[...]  # (2, w, gy): floor / floor+1 column one-hots
     yf = yf_ref[0]
     xf = xf_ref[0]
 
     @pl.when(s == 0)
     def _init():
+        # Fresh working set at stripe 0 of every batch tile: scratch persists
+        # across grid steps, and without this reset frames of tile t would
+        # blend into the warm-up stripes of tile t+1.
         r2_s[...] = jnp.zeros_like(r2_s)
         r1_s[...] = jnp.zeros_like(r1_s)
         apart_s[...] = jnp.zeros_like(apart_s)
@@ -92,59 +113,61 @@ def _kernel(
         s2_s[...] = jnp.zeros_like(s2_s)
         s1_s[...] = jnp.zeros_like(s1_s)
 
-    px = img_ref[...].astype(jnp.float32)  # (r, w)
+    px = img_ref[...].astype(jnp.float32)  # (bt, r, w)
     live = jnp.where(s < n_stripes, 1.0, 0.0)
     msk = msk_ref[...].astype(jnp.float32) * live
 
-    # ---- GC: one-hot z reduction, static row split, constant column matmul
+    # ---- GC: one dense one-hot z-reduction for all frames, rows and both
+    # homogeneous channels at once, then a static row split onto planes
+    # s / s+1 (rows [0, split) land on plane s, the rest on s+1). The one-hot
+    # is materialized with w minor so the column contraction needs no
+    # transposition of the large operand.
     zbin = jnp.floor(px * inv_rs + 0.5).astype(jnp.int32)
-    zi = jax.lax.broadcasted_iota(jnp.int32, zbin.shape + (gz,), 2)
-    ohz = jnp.where(zbin[..., None] == zi, 1.0, 0.0) * msk[..., None]
-    ohz_f = ohz * px[..., None]
-
-    def reduce(rows):
-        cnt = jnp.einsum("iwz,wg->zg", ohz[rows], col_oh)
-        ssum = jnp.einsum("iwz,wg->zg", ohz_f[rows], col_oh)
-        return jnp.stack([cnt, ssum], axis=0)  # (2, gz, gy)
-
-    contrib_cur = reduce(slice(0, split))       # -> plane s
-    contrib_next = reduce(slice(split, None))   # -> plane s+1
+    zi = jax.lax.broadcasted_iota(jnp.int32, zbin.shape[:2] + (gz, zbin.shape[2]), 2)
+    eq = zbin[:, :, None, :] == zi  # (bt, r, gz, w)
+    # select (mask, masked-intensity) directly through the one-hot predicate:
+    # cheaper than materializing the 0/1 one-hot and multiplying twice
+    ohz = jnp.where(eq, msk[:, :, None, :], 0.0)
+    both = jnp.stack(
+        [ohz, jnp.where(eq, (px * msk)[:, :, None, :], 0.0)], axis=1
+    )  # (bt, 2, r, gz, w)
+    zgi = jnp.einsum("bcizw,wg->bcizg", both, col_oh)  # one matmul, not four
+    contrib_cur = zgi[:, :, :split].sum(axis=2)  # (bt, 2, gz, gy) -> plane s
+    contrib_next = zgi[:, :, split:].sum(axis=2)  # -> plane s+1
 
     r2 = r2_s[...]
     r1 = r1_s[...]
     r0 = apart_s[...] + contrib_cur  # raw plane s complete
 
     # ---- GF of plane s-1 (both homogeneous channels, one pass)
-    mix = taps[0] * r2 + taps[1] * r1 + taps[2] * r0  # x-axis
-    mix = _conv3_axis(mix, taps, 1)  # z
-    mix = _conv3_axis(mix, taps, 2)  # y
-    b_new = jnp.where(mix[0] > 1e-12, mix[1] / jnp.maximum(mix[0], 1e-12), 0.0)
+    mix = taps[0] * r2 + taps[1] * r1 + taps[2] * r0  # x axis (stripe index)
+    mix = conv3_axis(mix, taps, 2)  # z axis (scratch layout (bt, 2, gz, gy))
+    mix = conv3_axis(mix, taps, 3)  # y axis
+    b_new = jnp.where(
+        mix[:, 0] > 1e-12, mix[:, 1] / jnp.maximum(mix[:, 0], 1e-12), 0.0
+    )  # (bt, gz, gy)
 
     # ---- TI of stripe s-2 against blurred planes s-2 (b1) and s-1 (b_new)
-    spx = s2_s[...]
+    spx = s2_s[...]  # (bt, r, w)
     fz = spx * inv_rs
     z0 = jnp.floor(fz).astype(jnp.int32)
     zfr = fz - z0.astype(jnp.float32)
-    zi2 = jax.lax.broadcasted_iota(jnp.int32, z0.shape + (gz,), 2)
+    zi2 = jax.lax.broadcasted_iota(jnp.int32, z0.shape[:2] + (gz, z0.shape[2]), 2)
     wz = (
-        jnp.where(z0[..., None] == zi2, 1.0, 0.0) * (1.0 - zfr)[..., None]
-        + jnp.where((z0 + 1)[..., None] == zi2, 1.0, 0.0) * zfr[..., None]
-    )
-    b1 = b1_s[...]
-    planes = {
-        (0, 0): jnp.einsum("zg,wg->wz", b1, y_oh0),
-        (0, 1): jnp.einsum("zg,wg->wz", b1, y_oh1),
-        (1, 0): jnp.einsum("zg,wg->wz", b_new, y_oh0),
-        (1, 1): jnp.einsum("zg,wg->wz", b_new, y_oh1),
-    }
-    wx = (1.0 - xf, xf)
-    wy = (1.0 - yf, yf)
-    out = jnp.zeros(spx.shape, jnp.float32)
-    for di in (0, 1):
-        for dj in (0, 1):
-            zint = jnp.einsum("wz,iwz->iw", planes[(di, dj)], wz)
-            out = out + wx[di][:, None] * wy[dj][None, :] * zint
-    out_ref[...] = out
+        jnp.where(z0[:, :, None, :] == zi2, 1.0, 0.0) * (1.0 - zfr)[:, :, None, :]
+        + jnp.where((z0 + 1)[:, :, None, :] == zi2, 1.0, 0.0) * zfr[:, :, None, :]
+    )  # (bt, r, gz, w)
+    planes = jnp.stack([b1_s[...], b_new], axis=0)  # (2, bt, gz, gy)
+    # all four y-corner gathers in one contraction over gy (minor on both
+    # operands: no transposition of the planes)
+    gathered = jnp.einsum("pbzg,cwg->pbzcw", planes, y_oh)  # (2, bt, gz, 2, w)
+    # fold the x/y lerp weights before the z contraction (linearity)
+    wy = gathered[:, :, :, 0] * (1.0 - yf) + gathered[:, :, :, 1] * yf
+    q = (
+        wy[0][:, None] * (1.0 - xf)[None, :, None, None]
+        + wy[1][:, None] * xf[None, :, None, None]
+    )  # (bt, r, gz, w)
+    out_ref[...] = jnp.sum(wz * q, axis=2)
 
     # ---- rotate the working set (the macro-pipeline advance)
     r2_s[...] = r1
@@ -155,23 +178,43 @@ def _kernel(
     s1_s[...] = px
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret", "batch_tile"))
 def bg_fused_kernel_call(
-    image: jnp.ndarray, cfg: BGConfig, interpret: bool | None = None
+    image: jnp.ndarray,
+    cfg: BGConfig,
+    interpret: bool | None = None,
+    batch_tile: int | None = None,
 ) -> jnp.ndarray:
-    """Fused BG pipeline. (h, w) image -> float32 (h, w) filtered surface.
+    """Fused BG pipeline, single frame or batch.
 
-    Matches ref.ref_fused (paper normalization, unquantized).
+    (h, w) -> float32 (h, w); (b, h, w) -> float32 (b, h, w). A single frame
+    is exactly the b == 1 batch (same kernel, bit-identical output). Matches
+    ref.ref_fused per frame (paper normalization, unquantized).
+
+    ``batch_tile`` caps frames per grid step (clamped to b; default
+    ``DEFAULT_BATCH_TILE``). Batches not divisible by the tile are padded
+    with zero frames that are masked out of GC and dropped from the output.
     """
     if interpret is None:
         interpret = default_interpret()
-    h, w = image.shape
+    squeeze = image.ndim == 2
+    if squeeze:
+        image = image[None]
+    b, h, w = image.shape
     r = cfg.r
     _, gy, gz = grid_shape(h, w, cfg)
     n = -(-h // r)
     hp = n * r
-    img_p = jnp.pad(image.astype(jnp.float32), ((0, hp - h), (0, 0)))
-    msk_p = jnp.pad(jnp.ones((h, w), jnp.float32), ((0, hp - h), (0, 0)))
+    bt = DEFAULT_BATCH_TILE if batch_tile is None else batch_tile
+    bt = max(1, min(bt, b))
+    nb = -(-b // bt)
+    bp = nb * bt
+    img_p = jnp.pad(
+        image.astype(jnp.float32), ((0, bp - b), (0, hp - h), (0, 0))
+    )
+    msk_p = jnp.pad(
+        jnp.ones((b, h, w), jnp.float32), ((0, bp - b), (0, hp - h), (0, 0))
+    )
 
     oh0, oh1, yf = ti_col_onehots(w, gy, r)
     kern = functools.partial(
@@ -182,37 +225,37 @@ def bg_fused_kernel_call(
         split=gc_row_split(r),
         n_stripes=n,
     )
-    const = lambda shape: pl.BlockSpec(shape, lambda s: tuple(0 for _ in shape))
+    const = lambda shape: pl.BlockSpec(shape, lambda bi, s: tuple(0 for _ in shape))
+    frame_spec = lambda imap: pl.BlockSpec((bt, r, w), imap)
     out = pl.pallas_call(
         kern,
-        grid=(n + 2,),
+        grid=(nb, n + 2),
         in_specs=[
-            pl.BlockSpec((r, w), lambda s: (jnp.minimum(s, n - 1), 0)),
-            pl.BlockSpec((r, w), lambda s: (jnp.minimum(s, n - 1), 0)),
+            frame_spec(lambda bi, s: (bi, jnp.minimum(s, n - 1), 0)),
+            frame_spec(lambda bi, s: (bi, jnp.minimum(s, n - 1), 0)),
             const((w, gy)),
-            const((w, gy)),
-            const((w, gy)),
+            const((2, w, gy)),
             const((1, w)),
             const((1, r)),
         ],
-        out_specs=pl.BlockSpec((r, w), lambda s: (jnp.maximum(s - 2, 0), 0)),
-        out_shape=jax.ShapeDtypeStruct((hp, w), jnp.float32),
+        out_specs=frame_spec(lambda bi, s: (bi, jnp.maximum(s - 2, 0), 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, hp, w), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((2, gz, gy), jnp.float32),  # raw plane s-2
-            pltpu.VMEM((2, gz, gy), jnp.float32),  # raw plane s-1
-            pltpu.VMEM((2, gz, gy), jnp.float32),  # partial plane s(+1)
-            pltpu.VMEM((gz, gy), jnp.float32),  # blurred plane s-2
-            pltpu.VMEM((r, w), jnp.float32),  # line buffer stripe s-2
-            pltpu.VMEM((r, w), jnp.float32),  # line buffer stripe s-1
+            pltpu.VMEM((bt, 2, gz, gy), jnp.float32),  # raw plane s-2
+            pltpu.VMEM((bt, 2, gz, gy), jnp.float32),  # raw plane s-1
+            pltpu.VMEM((bt, 2, gz, gy), jnp.float32),  # partial plane s(+1)
+            pltpu.VMEM((bt, gz, gy), jnp.float32),  # blurred plane s-2
+            pltpu.VMEM((bt, r, w), jnp.float32),  # line buffer stripe s-2
+            pltpu.VMEM((bt, r, w), jnp.float32),  # line buffer stripe s-1
         ],
         interpret=interpret,
     )(
         img_p,
         msk_p,
         jnp.asarray(gc_col_onehot(w, gy, r)),
-        jnp.asarray(oh0),
-        jnp.asarray(oh1),
+        jnp.asarray(np.stack([oh0, oh1])),
         jnp.asarray(yf)[None],
         jnp.asarray((np.arange(r) / r).astype(np.float32))[None],
     )
-    return out[:h]
+    out = out[:b, :h]
+    return out[0] if squeeze else out

@@ -12,10 +12,11 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core.bilateral_grid import BGConfig, grid_shape
+from repro.core.bilateral_grid import BGConfig, conv3_axis, grid_shape
 
 __all__ = [
     "BGConfig",
+    "conv3_axis",
     "grid_shape",
     "default_interpret",
     "gc_col_onehot",

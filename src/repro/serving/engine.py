@@ -85,6 +85,7 @@ class ServeEngine:
         self.active = [False] * max_slots
         self.requests: Dict[int, Request] = {}
         self.slot_to_uid: List[Optional[int]] = [None] * max_slots
+        self._finished_at_prefill: List[Request] = []
         self._decode = jax.jit(make_serve_step(cfg))
         self._prefill = jax.jit(make_prefill(cfg))
 
@@ -109,16 +110,27 @@ class ServeEngine:
         self.last_token = self.last_token.at[slot].set(nxt)
         req.generated.append(int(nxt))
         req.slot = slot
+        self.requests[req.uid] = req
+        # the prefill-sampled token can already terminate the request (eos or
+        # a max_tokens budget of 1) — never occupy a decode slot in that case,
+        # but keep the request visible to step()'s finished list so drivers
+        # counting completions per step still see it
+        if int(nxt) == req.eos_id or len(req.generated) >= req.max_tokens:
+            req.done = True
+            self._finished_at_prefill.append(req)
+            return True
         self.active[slot] = True
         self.slot_to_uid[slot] = req.uid
-        self.requests[req.uid] = req
         return True
 
     # ---------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """One batched decode step; returns requests finished this step."""
+        """One batched decode step; returns requests finished since the last
+        step (including any that terminated already at prefill)."""
+        finished_early = self._finished_at_prefill
+        self._finished_at_prefill = []
         if not any(self.active):
-            return []
+            return finished_early
         logits, self.caches = self._decode(
             self.params, self.caches, self.last_token[:, None], self.positions
         )
@@ -129,7 +141,7 @@ class ServeEngine:
         self.last_token = jnp.where(
             jnp.asarray(self.active), nxt, self.last_token
         )
-        finished = []
+        finished = finished_early
         for slot, uid in enumerate(self.slot_to_uid):
             if uid is None or not self.active[slot]:
                 continue

@@ -1,0 +1,43 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+The repo targets the promoted spellings (``jax.shard_map``, ``jax.set_mesh``)
+but must also run on the pinned 0.4.x toolchain where ``shard_map`` still
+lives in ``jax.experimental`` and the active-mesh context is entered via
+``jax.sharding.use_mesh`` / the ``Mesh`` object itself. Import from here
+instead of feature-testing at every call site.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "get_active_mesh"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for logical-axis sharding."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    # jax <= 0.4.x: Mesh is itself a context manager entering the resource env
+    return mesh
+
+
+def get_active_mesh():
+    """The mesh made active by :func:`set_mesh`, or None.
+
+    Newer JAX exposes it as ``jax.sharding.get_abstract_mesh``; on 0.4.x the
+    active mesh lives in the pjit resource env that ``with mesh:`` populates.
+    Returns a possibly-empty mesh object; callers should treat ``.empty`` as
+    "no mesh active".
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as _mesh_lib  # 0.4.x internal, stable in the pin
+
+    return _mesh_lib.thread_resources.env.physical_mesh

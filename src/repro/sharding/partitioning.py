@@ -81,7 +81,9 @@ def _mesh_axes_in_use() -> set:
 
 
 def get_abstract_mesh() -> Optional[Mesh]:
-    m = jax.sharding.get_abstract_mesh()
+    from .compat import get_active_mesh
+
+    m = get_active_mesh()
     if m is None or m.empty:
         return None
     return m

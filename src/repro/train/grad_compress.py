@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.compat import shard_map
+
 __all__ = ["compressed_mean_grads", "quantize_dequantize_roundtrip"]
 
 
@@ -27,7 +29,12 @@ def _psum_int8(g, axes: Sequence[str]):
     total = jax.lax.psum(q, axes)
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        # jax.lax.axis_size is a post-0.4 addition; psum(1) is the classic
+        # spelling of "size of this mapped axis" and works everywhere.
+        if hasattr(jax.lax, "axis_size"):
+            n *= jax.lax.axis_size(a)
+        else:
+            n *= jax.lax.psum(1, a)
     return (total.astype(jnp.float32) * scale) / n
 
 
@@ -42,7 +49,7 @@ def compressed_mean_grads(grads, mesh, dp_axes=("pod", "data")):
         return grads
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=P(*axes),
         out_specs=P(*axes),

@@ -98,13 +98,14 @@ def test_collectives_counted_with_ring_model():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_cost import analyze_hlo
+        from repro.sharding.compat import set_mesh
 
         mesh = jax.make_mesh((8,), ("x",))
         sh = NamedSharding(mesh, P("x", None))
         rep = NamedSharding(mesh, P())
         def f(a):
             return jnp.sum(a * 2.0)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             txt = jax.jit(f, in_shardings=(sh,), out_shardings=rep).lower(
                 jax.ShapeDtypeStruct((64, 32), jnp.float32)).compile().as_text()
         hc = analyze_hlo(txt)
