@@ -43,12 +43,20 @@ __all__ = [
     "grid_slice",
     "grid_slice_homogeneous",
     "bilateral_grid_filter",
+    "quantize_intensity",
 ]
 
 
 def _round_half_up(v: jnp.ndarray) -> jnp.ndarray:
     """Deterministic round-half-up, used for every [.] in the paper."""
     return jnp.floor(v + 0.5)
+
+
+def quantize_intensity(out: jnp.ndarray, cfg: "BGConfig") -> jnp.ndarray:
+    """The paper's output quantization: round-half-up, clip to the intensity
+    range. The single source of truth for every pipeline exit (jnp reference,
+    streaming scan, Pallas kernels, sharded service path)."""
+    return jnp.clip(_round_half_up(out), 0.0, cfg.intensity_max)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -287,5 +295,5 @@ def bilateral_grid_filter(
     else:
         out = grid_slice_homogeneous(blurred, image, cfg)
     if quantize_output:
-        out = jnp.clip(_round_half_up(out), 0.0, cfg.intensity_max)
+        out = quantize_intensity(out, cfg)
     return out

@@ -31,26 +31,54 @@ from .bilateral_grid import (
     _trilerp_weights,
     gaussian_taps,
     grid_shape,
+    quantize_intensity,
 )
 
 __all__ = ["bilateral_grid_filter_streaming"]
 
 
 @partial(jax.jit, static_argnames=("cfg", "quantize_output"))
-def bilateral_grid_filter_streaming(
+def _streaming_call(
     image: jnp.ndarray, cfg: BGConfig, quantize_output: bool = True
+) -> jnp.ndarray:
+    if image.ndim == 3:
+        return jax.vmap(
+            lambda im: _streaming_single(im, cfg, quantize_output)
+        )(image)
+    return _streaming_single(image, cfg, quantize_output)
+
+
+def bilateral_grid_filter_streaming(
+    image: jnp.ndarray,
+    cfg: BGConfig,
+    quantize_output: bool = True,
+    sharded: bool = False,
+    mesh=None,
 ) -> jnp.ndarray:
     """Stripe-streaming BG; numerically equivalent to bilateral_grid_filter.
 
     Accepts a single (h, w) frame or a (b, h, w) batch; batches are vmapped
     over the scan (the per-frame working set stays O(grid planes + r lines),
     so b frames stream in parallel with a b x working-set footprint).
+
+    ``sharded=True`` shards the batch axis of the vmapped scan over ``mesh``
+    (default: a 1-D mesh over all local devices) — frames are independent, so
+    this is the same collective-free data parallelism as
+    ``repro.sharding.bg_shard``, just over the jnp scan instead of the Pallas
+    kernel. Falls back to the plain call on a single device.
     """
-    if image.ndim == 3:
-        return jax.vmap(
-            lambda im: _streaming_single(im, cfg, quantize_output)
-        )(image)
-    return _streaming_single(image, cfg, quantize_output)
+    if sharded and image.ndim == 3:
+        from repro.sharding.bg_shard import batch_mesh, shard_batch_call
+
+        if mesh is None and jax.device_count() > 1:
+            mesh = batch_mesh()
+        if mesh is not None and int(mesh.devices.size) > 1:
+            return shard_batch_call(
+                partial(_streaming_call, cfg=cfg, quantize_output=quantize_output),
+                image,
+                mesh,
+            )
+    return _streaming_call(image, cfg, quantize_output)
 
 
 def _streaming_single(
@@ -160,5 +188,5 @@ def _streaming_single(
 
     out = outs[2:].reshape(hp, w)[:h]
     if quantize_output:
-        out = jnp.clip(_round_half_up(out), 0.0, cfg.intensity_max)
+        out = quantize_intensity(out, cfg)
     return out

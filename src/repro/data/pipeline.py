@@ -3,8 +3,10 @@
 This is where the paper's contribution plugs into the LM framework
 (DESIGN.md §Arch-applicability): the [vlm] image frontend and the [audio]
 spectrogram frontend both run bilateral-grid denoising before patch/frame
-embedding. The denoiser is batched with vmap and uses the Pallas kernels on
-TPU (interpret elsewhere).
+embedding. Every stage exposes the full dispatch ladder — vmapped jnp
+reference, fused Pallas kernel, or batch-axis device-sharded kernel — via
+``use_kernels=`` / ``sharded=``, so the frontends ride the same hot path the
+serving engine does.
 """
 from __future__ import annotations
 
@@ -20,21 +22,58 @@ from repro.core.bilateral_grid import BGConfig, bilateral_grid_filter
 __all__ = ["denoise_batch", "patchify_embed", "vlm_preprocess", "spectrogram_denoise"]
 
 
-@partial(jax.jit, static_argnames=("cfg", "use_kernels"))
+@partial(jax.jit, static_argnames=("cfg",))
+def _denoise_batch_ref(images: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+    return jax.vmap(lambda im: bilateral_grid_filter(im, cfg))(images)
+
+
 def denoise_batch(
-    images: jnp.ndarray, cfg: BGConfig, use_kernels: bool = False
+    images: jnp.ndarray,
+    cfg: BGConfig,
+    use_kernels: bool = False,
+    sharded: bool = False,
+    mesh=None,
+    stream_input: bool = False,
 ) -> jnp.ndarray:
-    """(B, H, W) noisy [0,255] -> denoised batch.
+    """(B, H, W) or color (B, H, W, 3) noisy [0,255] -> denoised batch.
 
     use_kernels=True feeds the whole batch to the fused Pallas macro-pipeline
     in one dispatch (its native (batch, stripe) grid — constants shared, grid
-    in VMEM); the jnp reference path is vmapped per frame.
+    in VMEM); the jnp reference path is vmapped per frame. sharded=True
+    additionally shards the batch axis over ``mesh`` (default: all local
+    devices; falls back to the single-device fused call on one device) and
+    implies the kernel path. ``stream_input`` selects the kernel's explicit
+    double-buffered HBM->VMEM input DMA.
+
+    Color frames are denoised per channel by folding the channel axis into
+    the batch axis before the fused/sharded dispatch — the grid stays
+    per-channel (the paper's grayscale pipeline), and channels of one frame
+    may land on different devices, which is fine because frames and channels
+    are equally independent.
     """
+    if images.ndim == 4:
+        b, h, w, c = images.shape
+        folded = jnp.moveaxis(images, -1, 1).reshape(b * c, h, w)
+        out = denoise_batch(
+            folded,
+            cfg,
+            use_kernels=use_kernels,
+            sharded=sharded,
+            mesh=mesh,
+            stream_input=stream_input,
+        )
+        return jnp.moveaxis(out.reshape(b, c, h, w), 1, -1)
+    if sharded:
+        from repro.sharding.bg_shard import bg_denoise_sharded
+
+        return bg_denoise_sharded(
+            images, cfg, mesh=mesh, stream_input=stream_input, quantize_output=True
+        )
     if use_kernels:
         from repro.kernels import bilateral_grid_filter_pallas
 
-        return bilateral_grid_filter_pallas(images, cfg)
-    return jax.vmap(lambda im: bilateral_grid_filter(im, cfg))(images)
+        return bilateral_grid_filter_pallas(images, cfg, stream_input=stream_input)
+    return _denoise_batch_ref(images, cfg)
 
 
 def patchify_embed(
@@ -63,18 +102,40 @@ def vlm_preprocess(
     patch: int,
     dim: int,
     denoise: bool = True,
+    use_kernels: bool = False,
+    sharded: bool = False,
+    mesh=None,
 ) -> jnp.ndarray:
-    """Full [vlm] frontend stage: BG denoise -> patchify -> project."""
+    """Full [vlm] frontend stage: BG denoise -> patchify -> project.
+
+    ``use_kernels``/``sharded`` pick the denoiser dispatch exactly as in
+    :func:`denoise_batch` — the VLM frontend rides the fused (and, on a
+    multi-device host, sharded) kernel path rather than being pinned to the
+    vmapped reference.
+    """
     if denoise:
-        images = denoise_batch(images, bg_cfg)
+        images = denoise_batch(
+            images, bg_cfg, use_kernels=use_kernels, sharded=sharded, mesh=mesh
+        )
     return patchify_embed(images, patch, dim)
 
 
-def spectrogram_denoise(spec: jnp.ndarray, bg_cfg: Optional[BGConfig] = None):
-    """[audio] stage: treat a (B, T, F) spectrogram as images in [0,255]."""
+def spectrogram_denoise(
+    spec: jnp.ndarray,
+    bg_cfg: Optional[BGConfig] = None,
+    use_kernels: bool = False,
+    sharded: bool = False,
+    mesh=None,
+):
+    """[audio] stage: treat a (B, T, F) spectrogram as images in [0,255].
+
+    Forwards ``use_kernels``/``sharded`` to :func:`denoise_batch`.
+    """
     bg_cfg = bg_cfg or BGConfig(r=4, sigma_s=2.0, sigma_r=40.0)
     lo = jnp.min(spec)
     hi = jnp.max(spec)
     scaled = (spec - lo) / jnp.maximum(hi - lo, 1e-9) * 255.0
-    den = denoise_batch(scaled, bg_cfg)
+    den = denoise_batch(
+        scaled, bg_cfg, use_kernels=use_kernels, sharded=sharded, mesh=mesh
+    )
     return den / 255.0 * (hi - lo) + lo

@@ -17,7 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.bilateral_grid import BGConfig, grid_normalize
+from repro.core.bilateral_grid import BGConfig, grid_normalize, quantize_intensity
 
 from .bg_blur import bg_blur_kernel_call
 from .bg_create import bg_create_kernel_call
@@ -47,7 +47,14 @@ def _staged_single(image, cfg, interpret):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "fused", "quantize_output", "interpret", "batch_tile"),
+    static_argnames=(
+        "cfg",
+        "fused",
+        "quantize_output",
+        "interpret",
+        "batch_tile",
+        "stream_input",
+    ),
 )
 def bilateral_grid_filter_pallas(
     image: jnp.ndarray,
@@ -56,6 +63,7 @@ def bilateral_grid_filter_pallas(
     quantize_output: bool = True,
     interpret: bool | None = None,
     batch_tile: int | None = None,
+    stream_input: bool = False,
 ) -> jnp.ndarray:
     """Kernel-backed BG pipeline (paper normalization), single frame or batch.
 
@@ -63,7 +71,8 @@ def bilateral_grid_filter_pallas(
     batches share one dispatch via the (batch, stripe) grid); fused=False
     chains the three staged kernels (grid round-trips through HBM — the
     unfused baseline used for perf comparison), vmapped over any batch axis.
-    ``batch_tile`` is forwarded to the fused kernel.
+    ``batch_tile`` and ``stream_input`` (explicit double-buffered HBM->VMEM
+    input DMA) are forwarded to the fused kernel.
     """
     if cfg.normalize_mode != "paper":
         raise ValueError("pallas path implements the paper normalization mode")
@@ -72,12 +81,16 @@ def bilateral_grid_filter_pallas(
     image = image.astype(jnp.float32)
     if fused:
         out = bg_fused_kernel_call(
-            image, cfg, interpret=interpret, batch_tile=batch_tile
+            image,
+            cfg,
+            interpret=interpret,
+            batch_tile=batch_tile,
+            stream_input=stream_input,
         )
     elif image.ndim == 3:
         out = jax.vmap(lambda im: _staged_single(im, cfg, interpret))(image)
     else:
         out = _staged_single(image, cfg, interpret)
     if quantize_output:
-        out = jnp.clip(jnp.floor(out + 0.5), 0.0, cfg.intensity_max)
+        out = quantize_intensity(out, cfg)
     return out

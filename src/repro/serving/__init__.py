@@ -1,2 +1,3 @@
 from .engine import Request, ServeEngine, make_prefill, make_serve_step
+from .frames import FrameDenoiseEngine, FrameRequest
 from .sampling import greedy, sample_temperature, sample_topk

@@ -1,0 +1,112 @@
+"""Frame-denoise serving engine: mesh-divisible micro-batched dispatch.
+
+``engine.py`` serves tokens; this engine serves frames — the paper's
+real-time denoising as a service endpoint. Clients submit frames one at a
+time; the engine rounds the queue into micro-batches whose size is divisible
+by the device count of its batch mesh, so every ``step()`` hands each device
+an equal shard of the fused BG macro-pipeline with zero cross-device
+collectives (see ``repro.sharding.bg_shard``). A ragged tail (shutdown, low
+traffic) is flushed with ``step(force=True)`` / ``flush()`` — the sharded
+entry point pads it with zero frames that idle devices chew on.
+
+The dispatch is synchronous per micro-batch (one ``bg_denoise_sharded`` call)
+but amortizes compile/dispatch overhead exactly like the LM engine's batched
+decode step: the jitted callee is reused across steps because the
+micro-batch size is quantized to at most two shapes (full and forced-tail).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilateral_grid import BGConfig
+
+__all__ = ["FrameRequest", "FrameDenoiseEngine"]
+
+
+@dataclasses.dataclass
+class FrameRequest:
+    uid: int
+    frame: jnp.ndarray  # (h, w) grayscale [0, 255]
+    result: Optional[jnp.ndarray] = None
+
+
+class FrameDenoiseEngine:
+    """Micro-batching front for the sharded fused BG pipeline.
+
+    ``mesh=None`` builds a 1-D batch mesh over all local devices (single
+    device: plain fused kernel, no shard_map). ``max_batch`` caps frames per
+    dispatch and is rounded down to a mesh-divisible count so shards stay
+    equal-sized — but never below the device count (the smallest batch that
+    can shard evenly), so ``max_batch < n_devices`` is rounded *up* to one
+    frame per device.
+    """
+
+    def __init__(
+        self,
+        cfg: BGConfig,
+        mesh=None,
+        max_batch: int = 32,
+        stream_input: bool = False,
+        interpret: Optional[bool] = None,
+    ):
+        if mesh is None and jax.device_count() > 1:
+            from repro.sharding.bg_shard import batch_mesh
+
+            mesh = batch_mesh()
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_devices = 1 if mesh is None else int(mesh.devices.size)
+        self.max_batch = max(1, max_batch // self.n_devices) * self.n_devices
+        self.stream_input = stream_input
+        self.interpret = interpret
+        self._queue: Deque[FrameRequest] = deque()
+
+    # ------------------------------------------------------------ requests
+    def submit(self, req: FrameRequest) -> None:
+        """Queue one frame; it is denoised at the next full micro-batch."""
+        self._queue.append(req)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ---------------------------------------------------------------- step
+    def step(self, force: bool = False) -> List[FrameRequest]:
+        """Dispatch one micro-batch if a mesh-divisible batch is queued.
+
+        Returns the completed requests (empty when still accumulating).
+        ``force=True`` dispatches the ragged tail too — the sharded call pads
+        it up to the device count internally.
+        """
+        n = len(self._queue)
+        k = min((n // self.n_devices) * self.n_devices, self.max_batch)
+        if k == 0 and force and n:
+            k = min(n, self.max_batch)
+        if k == 0:
+            return []
+        from repro.sharding.bg_shard import bg_denoise_sharded
+
+        reqs = [self._queue.popleft() for _ in range(k)]
+        batch = jnp.stack([jnp.asarray(r.frame, jnp.float32) for r in reqs])
+        out = bg_denoise_sharded(
+            batch,
+            self.cfg,
+            mesh=self.mesh,
+            stream_input=self.stream_input,
+            interpret=self.interpret,
+            quantize_output=True,
+        )
+        for i, r in enumerate(reqs):
+            r.result = out[i]
+        return reqs
+
+    def flush(self) -> List[FrameRequest]:
+        """Drain the queue completely (forced ragged dispatches)."""
+        done: List[FrameRequest] = []
+        while self._queue:
+            done.extend(self.step(force=True))
+        return done
