@@ -144,7 +144,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: tables,quality,kernels,throughput,sharded,lm,roofline",
+        help="comma list: tables,quality,kernels,throughput,sharded,video,lm,roofline",
     )
     ap.add_argument(
         "--no-snapshot",
@@ -161,6 +161,7 @@ def main() -> None:
         bench_bg_throughput,
         bench_lm,
         bench_roofline,
+        bench_video_stream,
     )
 
     modules = {
@@ -169,6 +170,7 @@ def main() -> None:
         "kernels": bench_bg_kernels,
         "throughput": bench_bg_throughput,
         "sharded": bench_bg_sharded,
+        "video": bench_video_stream,
         "lm": bench_lm,
         "roofline": bench_roofline,
     }

@@ -1,2 +1,8 @@
-from .synthetic import TokenStream, audio_frames, lm_batches, vision_context
+from .synthetic import (
+    TokenStream,
+    audio_frames,
+    lm_batches,
+    synthetic_video,
+    vision_context,
+)
 from .pipeline import denoise_batch, patchify_embed, spectrogram_denoise, vlm_preprocess

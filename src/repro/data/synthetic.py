@@ -11,7 +11,13 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-__all__ = ["TokenStream", "lm_batches", "vision_context", "audio_frames"]
+__all__ = [
+    "TokenStream",
+    "lm_batches",
+    "vision_context",
+    "audio_frames",
+    "synthetic_video",
+]
 
 
 class TokenStream:
@@ -46,6 +52,38 @@ def lm_batches(
     for _ in range(steps):
         toks = stream.sample(batch, seq)
         yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def synthetic_video(
+    key: int, n_frames: int, h: int = 128, w: int = 192, motion: float = 2.0
+):
+    """Deterministic clean video: a panning crop over one synthetic scene.
+
+    The shared fixture for video tests/benches (instead of ad-hoc noise
+    stacks): frame t is an ``(h, w)`` window into a larger
+    ``repro.core.synthetic_image`` scene, translated diagonally by ``motion``
+    pixels per frame — so consecutive frames are the *same* content under
+    camera motion, which is exactly what a temporal denoiser must track.
+    ``motion=0`` gives a static scene (every frame identical): the fixture
+    for temporal-accumulation PSNR tests. Fully reproducible from ``key``.
+
+    Returns a float32 ``(n_frames, h, w)`` jnp array in [0, 255]; add noise
+    per frame with ``repro.core.add_gaussian_noise`` (distinct seeds per
+    frame for independent noise realizations).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.noise import synthetic_image
+
+    if n_frames < 1:
+        raise ValueError(f"n_frames must be >= 1, got {n_frames}")
+    span = int(np.ceil(abs(motion) * (n_frames - 1)))
+    scene = np.asarray(synthetic_image(h + span, w + span, seed=key))
+    frames = np.empty((n_frames, h, w), np.float32)
+    for t in range(n_frames):
+        off = int(round(abs(motion) * t))
+        frames[t] = scene[off : off + h, off : off + w]
+    return jnp.asarray(frames)
 
 
 def vision_context(batch: int, n_tokens: int, dim: int, seed: int = 0) -> np.ndarray:

@@ -1,3 +1,23 @@
+"""Serving engines: LM continuous batching + the two frame-denoise fronts.
+
+Frame serving comes in two flavors; pick by how the caller wants to wait:
+
+  * ``frames.FrameDenoiseEngine`` — **synchronous** micro-batching. The
+    caller's thread owns the loop (``submit``/``step``/``flush``); each
+    dispatch stacks, launches, and returns request objects whose results the
+    caller realizes. Simple, deterministic, no threads — right for batch
+    jobs, tests, and single-tenant pipelines where the caller *is* the
+    frame source.
+  * ``async_engine.AsyncFrameEngine`` — **asynchronous** serving.
+    ``submit`` returns a Future immediately; a background dispatch thread
+    does deadline-aware micro-batching and double-buffered host->device
+    feeding (stacking batch N+1 while batch N computes), and a completion
+    thread resolves futures. Right for services: many producers, bounded
+    queues for backpressure, latency budgets, multi-stream video via a
+    ``repro.video`` packer, and strictly higher sustained frames/sec than
+    the synchronous engine (gated in benchmarks/bench_video_stream.py).
+"""
+from .async_engine import AsyncFrameEngine, AsyncFrameRequest
 from .engine import Request, ServeEngine, make_prefill, make_serve_step
 from .frames import FrameDenoiseEngine, FrameRequest
 from .sampling import greedy, sample_temperature, sample_topk

@@ -1,0 +1,356 @@
+"""Async frame-denoise engine: pipelined host->device feeding behind futures.
+
+``frames.FrameDenoiseEngine`` is synchronous per micro-batch: the caller's
+thread stacks the batch, dispatches it, and (in any real service) realizes
+the results before it can hand them back — so the device idles while the
+host stacks/converts, and the host idles while the device computes. This
+engine closes ROADMAP's "async/pipelined host-to-device frame feeding" item
+by splitting that loop across threads:
+
+  client threads   -- submit(frame) -> Future          (bounded queue)
+  dispatch thread  -- collect micro-batch, stack on host, device_put +
+                      launch (JAX async dispatch)       -> in-flight queue
+  completion thread-- block_until_ready, resolve futures, record latency
+
+The in-flight queue holds at most ``max_inflight`` (default 2) launched
+batches: while batch N computes on the device, the dispatch thread is
+already stacking and transferring batch N+1 (double buffering), and the
+completion thread is realizing batch N-1's results — the device never waits
+on host-side stacking, and ``put`` on a full in-flight queue is the
+backpressure that stops the host from racing arbitrarily far ahead of the
+device. Submission backpressure is the bounded request queue itself:
+``submit`` blocks (or raises ``queue.Full`` with ``block=False``) when
+``max_queue`` requests are pending.
+
+Micro-batching is deadline-aware: a batch dispatches when it is full, when
+the batch window since its first frame expires, or when any queued request's
+deadline is within ``deadline_margin_ms`` — low-traffic frames are not held
+hostage to batch-full, and latency-budgeted requests jump the window.
+
+Video mode: constructed with a ``repro.video.session.MultiStreamPacker``,
+requests carry a ``stream_id`` and each micro-batch takes at most one frame
+per stream (the temporal recursion is strictly sequential within a stream);
+same-stream repeats are deferred to the next batch. The per-stream grid
+carries chain through JAX's async dataflow, so back-to-back packs still
+overlap.
+
+Telemetry (``stats()``): queue/in-flight depth, dispatch count, mean batch
+size, p50/p99 request latency, deadline misses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Deque, Dict, Hashable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilateral_grid import BGConfig
+from repro.sharding.bg_shard import bg_denoise_sharded
+
+__all__ = ["AsyncFrameEngine", "AsyncFrameRequest"]
+
+_SENTINEL = object()
+
+
+@dataclasses.dataclass
+class AsyncFrameRequest:
+    """One queued frame. ``deadline`` is absolute ``time.monotonic`` seconds;
+    ``stream_id`` is set only in video (packer) mode."""
+
+    uid: int
+    frame: jnp.ndarray
+    future: Future
+    t_submit: float
+    deadline: Optional[float] = None
+    stream_id: Optional[Hashable] = None
+
+
+class AsyncFrameEngine:
+    """Background micro-batching denoise engine with per-request futures."""
+
+    def __init__(
+        self,
+        cfg: BGConfig,
+        mesh=None,
+        max_batch: int = 32,
+        max_queue: int = 256,
+        batch_window_ms: float = 2.0,
+        deadline_margin_ms: float = 1.0,
+        max_inflight: int = 2,
+        stream_input: bool = False,
+        interpret: Optional[bool] = None,
+        packer=None,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if mesh is None and packer is None and jax.device_count() > 1:
+            from repro.sharding.bg_shard import batch_mesh
+
+            mesh = batch_mesh()
+        self.cfg = cfg
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.batch_window = batch_window_ms / 1e3
+        self.deadline_margin = deadline_margin_ms / 1e3
+        self.stream_input = stream_input
+        self.interpret = interpret
+        self.packer = packer
+
+        self._queue: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self._inflight: "queue.Queue" = queue.Queue(maxsize=max_inflight)
+        self._held: Deque[AsyncFrameRequest] = deque()  # deferred same-stream
+        self._uid = itertools.count()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._outstanding = 0
+        self._drained = threading.Condition(self._lock)
+        # telemetry
+        self._latencies: Deque[float] = deque(maxlen=4096)
+        self._batch_sizes: Deque[int] = deque(maxlen=4096)
+        self._dispatches = 0
+        self._completed = 0
+        self._submitted = 0
+        self._deadline_misses = 0
+
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="bg-frame-dispatch", daemon=True
+        )
+        self._completer = threading.Thread(
+            target=self._complete_loop, name="bg-frame-complete", daemon=True
+        )
+        self._dispatcher.start()
+        self._completer.start()
+
+    # ------------------------------------------------------------- clients
+    def submit(
+        self,
+        frame,
+        stream_id: Optional[Hashable] = None,
+        deadline_ms: Optional[float] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> Future:
+        """Queue one frame; returns a Future resolving to the denoised frame.
+
+        Blocks when ``max_queue`` requests are already pending (``block=False``
+        raises ``queue.Full`` instead — the service's load-shed hook).
+        ``deadline_ms`` is a latency budget from now; an expiring deadline
+        forces its micro-batch out early.
+        """
+        if self.packer is not None and stream_id is None:
+            raise ValueError("video mode: submit needs a stream_id")
+        now = time.monotonic()
+        req = AsyncFrameRequest(
+            uid=next(self._uid),
+            frame=frame,
+            future=Future(),
+            t_submit=now,
+            deadline=None if deadline_ms is None else now + deadline_ms / 1e3,
+            stream_id=stream_id,
+        )
+        with self._lock:
+            # closed-check and outstanding-increment are atomic with close()'s
+            # flag set: a submit can never slip its request in behind the
+            # shutdown sentinel (close's flush waits on _outstanding first)
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            self._outstanding += 1
+            self._submitted += 1
+        try:
+            self._queue.put(req, block=block, timeout=timeout)
+        except queue.Full:
+            with self._lock:
+                self._outstanding -= 1
+                self._submitted -= 1
+            raise
+        return req.future
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted frame has resolved. True on success."""
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._drained:
+            while self._outstanding:
+                left = None if end is None else end - time.monotonic()
+                if left is not None and left <= 0:
+                    return False
+                self._drained.wait(timeout=left)
+        return True
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain outstanding work, then stop both threads (best-effort within
+        ``timeout`` — the threads are daemons, so a wedged device can delay
+        but never hang interpreter exit)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self.flush(timeout=timeout)
+        try:
+            # bounded: if flush timed out the queue may still be full
+            self._queue.put(_SENTINEL, timeout=max(timeout, 0.1))
+        except queue.Full:
+            return
+        self._dispatcher.join(timeout=timeout)
+        self._completer.join(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ----------------------------------------------------------- telemetry
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            lat = sorted(self._latencies)
+            sizes = list(self._batch_sizes)
+            stats = {
+                "submitted": self._submitted,
+                "completed": self._completed,
+                "dispatches": self._dispatches,
+                "queue_depth": self._queue.qsize(),
+                "inflight_depth": self._inflight.qsize(),
+                "deadline_misses": self._deadline_misses,
+                "mean_batch": (sum(sizes) / len(sizes)) if sizes else 0.0,
+            }
+        for name, q in (("latency_ms_p50", 0.50), ("latency_ms_p99", 0.99)):
+            stats[name] = (
+                lat[min(int(q * len(lat)), len(lat) - 1)] * 1e3 if lat else 0.0
+            )
+        return stats
+
+    # ------------------------------------------------------------ dispatch
+    def _get_next(self, timeout: Optional[float]):
+        """Next request: deferred same-stream holdovers first, then the queue."""
+        if self._held:
+            return self._held.popleft()
+        try:
+            return self._queue.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def _collect_batch(self) -> Optional[List[AsyncFrameRequest]]:
+        """Block for the first request, then fill until batch-full, window
+        expiry, or an imminent request deadline. Returns None on shutdown."""
+        first = self._get_next(timeout=0.1)
+        if first is None:
+            return []
+        if first is _SENTINEL:
+            return None
+        batch = [first]
+        streams = {first.stream_id}
+        deferred: List[AsyncFrameRequest] = []
+        target = self.max_batch
+        if self.packer is not None:
+            # one frame per stream per pack: a batch can never exceed the
+            # live-stream count, so don't wait out the window for frames that
+            # could only be same-stream repeats
+            target = max(1, min(target, self.packer.live()))
+        t_out = time.monotonic() + self.batch_window
+        if first.deadline is not None:
+            t_out = min(t_out, first.deadline - self.deadline_margin)
+        while len(batch) < target:
+            left = t_out - time.monotonic()
+            if left <= 0:
+                break
+            nxt = self._get_next(timeout=left)
+            if nxt is None:
+                break
+            if nxt is _SENTINEL:
+                self._queue.put(_SENTINEL)  # re-arm shutdown for the next loop
+                break
+            if self.packer is not None and nxt.stream_id in streams:
+                deferred.append(nxt)  # one frame per stream per pack
+                continue
+            batch.append(nxt)
+            streams.add(nxt.stream_id)
+            if nxt.deadline is not None:
+                t_out = min(t_out, nxt.deadline - self.deadline_margin)
+        self._held.extend(deferred)
+        return batch
+
+    def _launch(self, batch: List[AsyncFrameRequest]):
+        """Stack on host, transfer, and dispatch (async) one micro-batch.
+        Returns the lazy per-request outputs, submission-ordered."""
+        if self.packer is not None:
+            by_sid = {r.stream_id: r.frame for r in batch}
+            out = self.packer.pack(by_sid)
+            return [out[r.stream_id] for r in batch]
+        stacked = jnp.stack([jnp.asarray(r.frame, jnp.float32) for r in batch])
+        if self.mesh is None:
+            stacked = jax.device_put(stacked)  # overlap transfer with compute
+        out = bg_denoise_sharded(
+            stacked,
+            self.cfg,
+            mesh=self.mesh,
+            stream_input=self.stream_input,
+            interpret=self.interpret,
+            quantize_output=True,
+        )
+        return [out[i] for i in range(len(batch))]
+
+    def _dispatch_loop(self):
+        while True:
+            batch = self._collect_batch()
+            if batch is None:  # sentinel: propagate shutdown downstream
+                self._inflight.put(_SENTINEL)
+                return
+            if not batch:
+                continue
+            try:
+                outs = self._launch(batch)
+            except Exception as exc:  # config/shape errors -> fail the batch
+                self._finish(batch, error=exc)
+                continue
+            with self._lock:
+                self._dispatches += 1
+                self._batch_sizes.append(len(batch))
+            # backpressure: at most max_inflight launched batches downstream
+            self._inflight.put((batch, outs))
+
+    # ---------------------------------------------------------- completion
+    def _finish(self, batch, outs=None, error=None):
+        now = time.monotonic()
+        # Resolve futures BEFORE announcing completion: flush() returning must
+        # imply every future is done. A client-cancelled future is skipped
+        # (set_running_or_notify_cancel returns False and a RUNNING future can
+        # no longer be cancelled, so the set below cannot race).
+        for i, req in enumerate(batch):
+            if not req.future.set_running_or_notify_cancel():
+                continue
+            if error is not None:
+                req.future.set_exception(error)
+            else:
+                req.future.set_result(outs[i])
+        with self._lock:
+            for req in batch:
+                self._latencies.append(now - req.t_submit)
+                if req.deadline is not None and now > req.deadline:
+                    self._deadline_misses += 1
+                self._completed += error is None
+            self._outstanding -= len(batch)
+            self._drained.notify_all()
+
+    def _complete_loop(self):
+        while True:
+            item = self._inflight.get()
+            if item is _SENTINEL:
+                return
+            batch, outs = item
+            try:
+                outs = jax.block_until_ready(outs)
+            except Exception as exc:
+                self._finish(batch, error=exc)
+                continue
+            self._finish(batch, outs=outs)

@@ -13,6 +13,9 @@ The dispatch is synchronous per micro-batch (one ``bg_denoise_sharded`` call)
 but amortizes compile/dispatch overhead exactly like the LM engine's batched
 decode step: the jitted callee is reused across steps because the
 micro-batch size is quantized to at most two shapes (full and forced-tail).
+For a threaded front with futures, deadlines, and pipelined host->device
+feeding, use ``repro.serving.async_engine.AsyncFrameEngine`` (see the
+``repro.serving`` package docstring for when to pick which).
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bilateral_grid import BGConfig
+from repro.sharding.bg_shard import batch_mesh, bg_denoise_sharded
 
 __all__ = ["FrameRequest", "FrameDenoiseEngine"]
 
@@ -39,11 +43,11 @@ class FrameDenoiseEngine:
     """Micro-batching front for the sharded fused BG pipeline.
 
     ``mesh=None`` builds a 1-D batch mesh over all local devices (single
-    device: plain fused kernel, no shard_map). ``max_batch`` caps frames per
-    dispatch and is rounded down to a mesh-divisible count so shards stay
-    equal-sized — but never below the device count (the smallest batch that
-    can shard evenly), so ``max_batch < n_devices`` is rounded *up* to one
-    frame per device.
+    device: plain fused kernel, no shard_map). ``max_batch`` must be >= 1
+    (0/negative is rejected, not clamped); it caps frames per dispatch and is
+    rounded down to a mesh-divisible count so shards stay equal-sized — but
+    never below the device count (the smallest batch that can shard evenly),
+    so ``max_batch < n_devices`` is rounded *up* to one frame per device.
     """
 
     def __init__(
@@ -54,9 +58,9 @@ class FrameDenoiseEngine:
         stream_input: bool = False,
         interpret: Optional[bool] = None,
     ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if mesh is None and jax.device_count() > 1:
-            from repro.sharding.bg_shard import batch_mesh
-
             mesh = batch_mesh()
         self.cfg = cfg
         self.mesh = mesh
@@ -88,8 +92,6 @@ class FrameDenoiseEngine:
             k = min(n, self.max_batch)
         if k == 0:
             return []
-        from repro.sharding.bg_shard import bg_denoise_sharded
-
         reqs = [self._queue.popleft() for _ in range(k)]
         batch = jnp.stack([jnp.asarray(r.frame, jnp.float32) for r in reqs])
         out = bg_denoise_sharded(

@@ -1,0 +1,25 @@
+"""Real-time video denoising on top of the fused bilateral-grid pipeline.
+
+Two layers:
+
+  * :mod:`repro.video.temporal` — the temporal bilateral grid: a recursive
+    EMA of the blurred grid carried across frames of one stream
+    (``G_t = (1-a) * blur(create(f_t)) + a * G_{t-1}`` before slicing).
+    ``a == 0`` reduces exactly to the per-frame fused path (bit-identical).
+  * :mod:`repro.video.session` — per-stream state (grid carry, frame
+    counter) plus a multi-stream packer that batches one frame from each of
+    N live streams into a single batched dispatch, carrying the per-stream
+    grids as one stacked array.
+
+The async serving front for these lives in ``repro.serving.async_engine``.
+"""
+from .session import MultiStreamPacker, StreamSession
+from .temporal import blurred_grid_batch, carry_shape, temporal_denoise
+
+__all__ = [
+    "MultiStreamPacker",
+    "StreamSession",
+    "blurred_grid_batch",
+    "carry_shape",
+    "temporal_denoise",
+]

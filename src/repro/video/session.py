@@ -1,0 +1,159 @@
+"""Per-stream sessions + the multi-stream packer.
+
+A video service handles N concurrent streams, each an ordered frame sequence
+with its own temporal state. The throughput lever from PR 1/2 is batching —
+one dispatch per micro-batch — so the packer turns "one frame from each live
+stream" into exactly that: frames stack on a leading stream axis, the
+per-stream blurred-grid carries stack into one ``(n, gx, gy, gz, 2)`` array,
+and a per-stream alpha vector lets warm streams (``a_s``) and first-frame
+streams (forced ``a = 0``) share the dispatch. Temporal state never crosses
+streams: row i of the stacked carry is read and written only by stream i
+(asserted in tests/test_video.py).
+
+``alpha == 0`` streams always ride the fused per-frame kernel path — their
+output is bit-identical to the per-frame service *no matter which streams
+share the micro-batch* (batch composition is timing-dependent under the
+async engine, and the staged pipeline matches the fused kernel only to float
+tolerance). A pack that mixes cold and warm streams therefore issues two
+dispatches, one fused (cold) + one staged temporal (warm); uniform packs —
+the steady state of a homogeneous service — stay a single dispatch, and an
+all-cold pack never materializes a carry at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilateral_grid import BGConfig
+
+from .temporal import carry_shape, temporal_denoise
+
+__all__ = ["StreamSession", "MultiStreamPacker"]
+
+
+@dataclasses.dataclass
+class StreamSession:
+    """State of one live video stream.
+
+    ``carry`` is ``None`` until the stream's first temporal frame has been
+    packed (and stays ``None`` forever for ``alpha == 0`` streams — the
+    per-frame path needs no history).
+    """
+
+    sid: Hashable
+    alpha: float = 0.0
+    carry: Optional[jnp.ndarray] = None
+    frames_seen: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.alpha < 1.0:
+            raise ValueError(f"stream {self.sid!r}: alpha must be in [0, 1)")
+
+
+class MultiStreamPacker:
+    """Batches one frame per live stream into a single temporal dispatch."""
+
+    def __init__(
+        self,
+        cfg: BGConfig,
+        mesh=None,
+        interpret: Optional[bool] = None,
+        quantize_output: bool = True,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.interpret = interpret
+        self.quantize_output = quantize_output
+        self.sessions: Dict[Hashable, StreamSession] = {}
+
+    # ------------------------------------------------------------- streams
+    def open(self, sid: Hashable, alpha: float = 0.0) -> StreamSession:
+        if sid in self.sessions:
+            raise ValueError(f"stream {sid!r} already open")
+        sess = StreamSession(sid=sid, alpha=float(alpha))
+        self.sessions[sid] = sess
+        return sess
+
+    def close(self, sid: Hashable) -> None:
+        self.sessions.pop(sid)
+
+    def live(self) -> int:
+        return len(self.sessions)
+
+    # ---------------------------------------------------------------- pack
+    def pack(self, frames: Dict[Hashable, jnp.ndarray]) -> Dict[Hashable, jnp.ndarray]:
+        """Denoise one frame from each given stream in one batched dispatch.
+
+        ``frames`` maps stream id -> (h, w) frame; every id must be open and
+        appear at most once (the temporal recursion is strictly one frame per
+        stream per pack — the serving engine defers same-stream repeats to
+        the next micro-batch). All frames of a pack share one (h, w): the
+        batch axis of the fused kernel (and the stacked carry) needs a single
+        static frame shape. Returns stream id -> denoised frame and advances
+        each stream's carry/counter.
+        """
+        if not frames:
+            return {}
+        missing = [s for s in frames if s not in self.sessions]
+        if missing:
+            raise KeyError(f"streams not open: {missing!r}")
+        sids = sorted(frames, key=repr)
+        arrs = {s: jnp.asarray(frames[s], jnp.float32) for s in sids}
+        shapes = {a.shape for a in arrs.values()}
+        if len(shapes) != 1 or len(next(iter(shapes))) != 2:
+            raise ValueError(f"pack needs equal (h, w) frames, got {sorted(shapes)}")
+        sessions = {s: self.sessions[s] for s in sids}
+        # alpha == 0 streams ALWAYS ride the fused per-frame path — their
+        # output bits must not depend on which warm streams happen to share
+        # the micro-batch (the staged pipeline agrees with the fused kernel
+        # only to float tolerance, and batch composition is timing-dependent
+        # under the async engine). Mixed packs therefore split into one fused
+        # dispatch (cold streams) + one staged temporal dispatch (warm
+        # streams); uniform packs stay a single dispatch.
+        cold = [s for s in sids if sessions[s].alpha == 0.0]
+        warm = [s for s in sids if sessions[s].alpha > 0.0]
+        results = {}
+
+        if cold:
+            out, _ = temporal_denoise(
+                jnp.stack([arrs[s] for s in cold]),
+                self.cfg,
+                alpha=0.0,
+                mesh=self.mesh,
+                interpret=self.interpret,
+                quantize_output=self.quantize_output,
+            )
+            for i, s in enumerate(cold):
+                results[s] = out[i]
+        if warm:
+            batch = jnp.stack([arrs[s] for s in warm])
+            h, w = batch.shape[1:]
+            zero = jnp.zeros(carry_shape(h, w, self.cfg), jnp.float32)
+            carry = jnp.stack(
+                [zero if sessions[s].carry is None else sessions[s].carry
+                 for s in warm]
+            )
+            # first temporal frame of a stream: no history, blend weight 0
+            alpha = np.asarray(
+                [sessions[s].alpha if sessions[s].carry is not None else 0.0
+                 for s in warm],
+                np.float32,
+            )
+            out, new_carry = temporal_denoise(
+                batch,
+                self.cfg,
+                carry=carry,
+                alpha=alpha,
+                mesh=self.mesh,
+                interpret=self.interpret,
+                quantize_output=self.quantize_output,
+            )
+            for i, s in enumerate(warm):
+                results[s] = out[i]
+                sessions[s].carry = new_carry[i]
+        for s in sids:
+            sessions[s].frames_seen += 1
+        return results

@@ -1,0 +1,155 @@
+"""Temporal bilateral grid: a recursive EMA of the blurred grid per stream.
+
+Video is where the paper's real-time pipeline is actually deployed, and the
+failure mode a per-frame denoiser adds there is temporal flicker: each frame's
+grid is built from that frame's noise realization, so flat regions shimmer at
+the grid-cell scale even when the scene is static. The fix costs no extra
+kernel work on the image: carry the *blurred homogeneous grid* (the (count,
+sum) pair after GF, a few hundred KiB per stream) across frames and blend it
+recursively before slicing:
+
+    B_t = blur(create(f_t))                 # per-frame GC + GF, as today
+    G_t = (1 - a) * B_t + a * G_{t-1}       # temporal EMA, on the tiny grid
+    out = slice(normalize(G_t), f_t)        # TI against the blended grid
+
+Blending the homogeneous pair (not the normalized scalar grid) keeps the
+semantics of eq. (4): the EMA accumulates counts and intensity sums, so the
+normalized cell value is a proper weighted average over the exponential
+window — empty-in-this-frame cells inherit history instead of dividing by
+zero. The EMA runs on the grid, which is ``O(gx*gy*gz)`` — two to three
+orders of magnitude smaller than the frame — so the temporal extension adds
+no per-pixel work beyond the per-frame pipeline ("zero extra kernel cost").
+
+``a == 0`` degenerates to ``G_t = B_t``: the per-frame pipeline. For that
+case :func:`temporal_denoise` does not emulate the reduction — it dispatches
+the existing fused kernel path (``bg_denoise_sharded``) directly, so the
+output is *bit-identical* to the per-frame service path (asserted in
+tests/test_video.py), and no grid is materialized at all.
+
+For ``a > 0`` the grid must be visible between GF and TI, so the blend runs
+on the staged jnp pipeline (vmapped ``grid_create -> grid_blur``), which
+shares every building block with the reference path. Multi-stream batches
+stack the per-stream carries on a leading stream axis; per-stream ``a``
+vectors let one dispatch mix warm streams (``a_s``) and first-frame streams
+(forced ``a = 0``, see :mod:`repro.video.session`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilateral_grid import (
+    BGConfig,
+    grid_blur,
+    grid_create,
+    grid_normalize,
+    grid_shape,
+    grid_slice,
+    quantize_intensity,
+)
+from repro.sharding.bg_shard import bg_denoise_sharded
+
+__all__ = ["blurred_grid_batch", "carry_shape", "temporal_denoise"]
+
+
+def carry_shape(h: int, w: int, cfg: BGConfig) -> Tuple[int, int, int, int]:
+    """Shape of one stream's temporal carry: the blurred homogeneous grid
+    ``(gx, gy, gz, 2)`` (channel 0 = blurred count, 1 = blurred sum)."""
+    gx, gy, gz = grid_shape(h, w, cfg)
+    return (gx, gy, gz, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def blurred_grid_batch(frames: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+    """(n, h, w) frames -> (n, gx, gy, gz, 2) blurred homogeneous grids.
+
+    One ``B_t = blur(create(f_t))`` per frame — the quantity the temporal EMA
+    is defined over."""
+    frames = frames.astype(jnp.float32)
+    return jax.vmap(lambda f: grid_blur(grid_create(f, cfg), cfg))(frames)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "quantize_output"))
+def _temporal_step(
+    frames: jnp.ndarray,
+    carry: jnp.ndarray,
+    alpha: jnp.ndarray,
+    cfg: BGConfig,
+    quantize_output: bool,
+):
+    frames = frames.astype(jnp.float32)
+    blurred = blurred_grid_batch(frames, cfg)
+    a = alpha.astype(jnp.float32).reshape((-1, 1, 1, 1, 1))
+    new_carry = (1.0 - a) * blurred + a * carry
+    grid_f = grid_normalize(new_carry)
+    out = jax.vmap(lambda gf, f: grid_slice(gf, f, cfg))(grid_f, frames)
+    if quantize_output:
+        out = quantize_intensity(out, cfg)
+    return out, new_carry
+
+
+def temporal_denoise(
+    frames: jnp.ndarray,
+    cfg: BGConfig,
+    carry: Optional[jnp.ndarray] = None,
+    alpha=0.0,
+    *,
+    mesh=None,
+    interpret: Optional[bool] = None,
+    quantize_output: bool = True,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """One temporal step for a pack of streams: denoise + advance the carry.
+
+    Args:
+      frames: ``(n, h, w)`` — one frame from each of n streams (or a single
+        ``(h, w)`` frame, treated as n == 1).
+      carry: ``None`` when no stream has temporal history, else the stacked
+        ``(n, gx, gy, gz, 2)`` blurred-grid carries. Streams without history
+        inside a warm pack pass a zero carry row *and* a zero alpha entry
+        (the blend then reduces to ``B_t``; the packer arranges this).
+      alpha: scalar or length-n host-side blend weights in ``[0, 1)``.
+        ``alpha`` is configuration, not data — it must not be a traced value.
+
+    Returns ``(out, new_carry)``. When ``carry is None`` and every alpha is
+    zero (a pure per-frame pack) the fused kernel path is dispatched instead
+    of the staged pipeline: the output is bit-identical to
+    ``bg_denoise_sharded(frames, ...)`` and ``new_carry`` is ``None`` —
+    nothing temporal was computed, which is exactly the "reduces to the
+    per-frame path at a == 0" contract.
+    """
+    frames = jnp.asarray(frames)
+    squeeze = frames.ndim == 2
+    if squeeze:
+        frames = frames[None]
+    if frames.ndim != 3:
+        raise ValueError(f"expected (h, w) or (n, h, w) frames, got {frames.shape}")
+    n = frames.shape[0]
+    alpha_np = np.broadcast_to(np.asarray(alpha, np.float32), (n,))
+    if np.any(alpha_np < 0.0) or np.any(alpha_np >= 1.0):
+        raise ValueError(f"temporal alpha must be in [0, 1), got {alpha}")
+
+    if carry is None and not alpha_np.any():
+        out = bg_denoise_sharded(
+            frames,
+            cfg,
+            mesh=mesh,
+            interpret=interpret,
+            quantize_output=quantize_output,
+        )
+        return (out[0] if squeeze else out), None
+
+    if carry is None:
+        # warm-up pack of a temporal stream set: no history yet, so every
+        # effective alpha is 0 this step, but the carry must be produced.
+        carry = jnp.zeros((n,) + carry_shape(*frames.shape[1:], cfg), jnp.float32)
+        alpha_np = np.zeros((n,), np.float32)
+    if carry.shape[0] != n:
+        raise ValueError(f"carry leading axis {carry.shape[0]} != n frames {n}")
+    out, new_carry = _temporal_step(
+        frames, carry, jnp.asarray(alpha_np), cfg, quantize_output
+    )
+    return (out[0] if squeeze else out), new_carry

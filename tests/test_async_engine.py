@@ -1,0 +1,190 @@
+"""Async frame engine: equivalence with the sync engine, video-mode stream
+ordering, backpressure, deadlines, and argument validation.
+
+Wall-clock-sensitive tests (those asserting *when* a dispatch happens, not
+just that it happens) carry ``@pytest.mark.timing`` so loaded CI runners can
+run the suite with ``-m "not timing"``. Everything else is scheduling-order
+independent: futures resolve whenever the background threads get there.
+
+On a multi-device host (the forced 8-device CI mesh) the engine auto-builds
+a batch mesh and every dispatch goes through ``bg_denoise_sharded`` — the
+same assertions hold because sharding is bit-invisible (test_bg_sharded.py).
+"""
+import queue
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BGConfig, add_gaussian_noise
+from repro.data import synthetic_video
+from repro.serving import AsyncFrameEngine, FrameDenoiseEngine, FrameRequest
+from repro.video import MultiStreamPacker
+
+CFG = BGConfig(r=4, sigma_s=4.0, sigma_r=60.0)
+
+
+def _frames(n, h=32, w=48, seed=0):
+    vid = synthetic_video(seed, n, h, w, motion=1.0)
+    return [
+        np.asarray(add_gaussian_noise(vid[t], 30.0, seed=seed + t))
+        for t in range(n)
+    ]
+
+
+def test_results_match_sync_engine():
+    frames = _frames(11)
+    sync = FrameDenoiseEngine(CFG, max_batch=4)
+    for i, f in enumerate(frames):
+        sync.submit(FrameRequest(uid=i, frame=f))
+    ref = {r.uid: np.asarray(r.result) for r in sync.flush()}
+
+    with AsyncFrameEngine(CFG, max_batch=4, batch_window_ms=20.0) as eng:
+        futs = [eng.submit(f) for f in frames]
+        for i, fut in enumerate(futs):
+            np.testing.assert_array_equal(np.asarray(fut.result()), ref[i])
+        st = eng.stats()
+    assert st["submitted"] == st["completed"] == 11
+    assert st["dispatches"] >= 3  # max_batch 4 caps every micro-batch
+    assert st["latency_ms_p99"] >= st["latency_ms_p50"] > 0.0
+
+
+def test_video_mode_matches_solo_packer():
+    """Frames fan out over 3 streams through the engine; each stream's output
+    sequence must equal running that stream alone through a fresh packer —
+    per-request futures, per-stream order, no cross-stream state."""
+    n_frames, sids = 5, ("s0", "s1", "s2")
+    per_stream = {s: _frames(n_frames, seed=i * 11) for i, s in enumerate(sids)}
+    alphas = {"s0": 0.5, "s1": 0.0, "s2": 0.7}
+
+    packer = MultiStreamPacker(CFG)
+    for s in sids:
+        packer.open(s, alpha=alphas[s])
+    with AsyncFrameEngine(
+        CFG, max_batch=len(sids), batch_window_ms=20.0, packer=packer
+    ) as eng:
+        futs = [
+            (s, t, eng.submit(per_stream[s][t], stream_id=s))
+            for t in range(n_frames)
+            for s in sids
+        ]
+        outs = {(s, t): np.asarray(f.result()) for s, t, f in futs}
+
+    for s in sids:
+        solo = MultiStreamPacker(CFG)
+        solo.open(s, alpha=alphas[s])
+        for t in range(n_frames):
+            ref = solo.pack({s: per_stream[s][t]})[s]
+            np.testing.assert_array_equal(np.asarray(ref), outs[(s, t)])
+
+
+def test_video_mode_defers_same_stream_frames():
+    """Two frames of one stream never share a micro-batch: the second defers
+    to the next dispatch and still resolves in order."""
+    frames = _frames(6, seed=3)
+    packer = MultiStreamPacker(CFG)
+    packer.open("only", alpha=0.6)
+    with AsyncFrameEngine(
+        CFG, max_batch=8, batch_window_ms=5.0, packer=packer
+    ) as eng:
+        futs = [eng.submit(f, stream_id="only") for f in frames]
+        [f.result() for f in futs]
+        st = eng.stats()
+    assert st["dispatches"] == 6 and st["mean_batch"] == 1.0
+    assert packer.sessions["only"].frames_seen == 6
+
+
+def test_backpressure_and_flush():
+    frames = _frames(1)
+    with AsyncFrameEngine(
+        CFG, max_batch=1, max_queue=2, batch_window_ms=0.0
+    ) as eng:
+        rejected = 0
+        futs = []
+        for _ in range(50):
+            try:
+                futs.append(eng.submit(frames[0], block=False))
+            except queue.Full:
+                rejected += 1
+        assert rejected > 0  # the bounded queue sheds load
+        assert eng.flush(timeout=60.0)
+        assert all(f.done() for f in futs)
+        st = eng.stats()
+        assert st["submitted"] == st["completed"] == len(futs)
+
+
+def test_dispatch_errors_fail_futures_not_engine():
+    packer = MultiStreamPacker(CFG)
+    packer.open("ok", alpha=0.0)
+    frames = _frames(2)
+    with AsyncFrameEngine(
+        CFG, max_batch=2, batch_window_ms=5.0, packer=packer
+    ) as eng:
+        bad = eng.submit(frames[0], stream_id="ghost")  # stream never opened
+        with pytest.raises(KeyError):
+            bad.result(timeout=60.0)
+        good = eng.submit(frames[1], stream_id="ok")  # engine still serves
+        assert good.result(timeout=60.0).shape == frames[1].shape
+
+
+def test_cancelled_future_does_not_kill_engine():
+    """A client cancelling a pending future must not crash the completion
+    thread — later requests (even batch-mates of the cancelled one) still
+    resolve."""
+    frames = _frames(2)
+    with AsyncFrameEngine(CFG, max_batch=64, batch_window_ms=150.0) as eng:
+        f1 = eng.submit(frames[0])
+        f1.cancel()  # races the window; both outcomes must be survivable
+        f2 = eng.submit(frames[1])
+        assert f2.result(timeout=60.0).shape == frames[1].shape
+        assert f1.cancelled() or f1.done()
+        eng.submit(frames[0]).result(timeout=60.0)  # engine still serves
+
+
+def test_validation_and_lifecycle():
+    for bad_kw in (
+        {"max_batch": 0},
+        {"max_batch": -2},
+        {"max_queue": 0},
+        {"max_inflight": 0},
+    ):
+        with pytest.raises(ValueError):
+            AsyncFrameEngine(CFG, **bad_kw)
+    # sync engine satellite: 0/negative max_batch rejected, not clamped
+    for bad in (0, -1):
+        with pytest.raises(ValueError):
+            FrameDenoiseEngine(CFG, max_batch=bad)
+
+    eng = AsyncFrameEngine(CFG, max_batch=2, packer=MultiStreamPacker(CFG))
+    with pytest.raises(ValueError):
+        eng.submit(_frames(1)[0])  # video mode requires a stream_id
+    eng.close()
+    eng.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        eng.submit(_frames(1)[0], stream_id="x")
+
+
+@pytest.mark.timing
+def test_deadline_forces_early_dispatch():
+    """A lone frame with a 30ms budget must not wait out a 500ms window."""
+    frames = _frames(1)
+    with AsyncFrameEngine(CFG, max_batch=64, batch_window_ms=500.0) as eng:
+        eng.submit(frames[0]).result()  # warm-up compile outside the clock
+        t0 = time.monotonic()
+        eng.submit(frames[0], deadline_ms=30.0).result()
+        dt = time.monotonic() - t0
+    assert dt < 0.4, f"deadline ignored: {dt * 1e3:.0f}ms"
+
+
+@pytest.mark.timing
+def test_batch_window_expiry_dispatches_partial_batch():
+    """Low traffic: a never-full batch still dispatches after the window."""
+    frames = _frames(2)
+    with AsyncFrameEngine(CFG, max_batch=64, batch_window_ms=40.0) as eng:
+        eng.submit(frames[0]).result()  # warm-up compile outside the clock
+        t0 = time.monotonic()
+        out = eng.submit(frames[1]).result()
+        dt = time.monotonic() - t0
+        st = eng.stats()
+    assert out.shape == frames[1].shape
+    assert st["mean_batch"] == 1.0 and dt < 2.0
