@@ -15,22 +15,35 @@ tail, not single-dispatch time. This bench drives the same frame traffic
     feeding), so host-side work hides behind device compute.
 
 Both realize every result to host memory (a service must). The async engine
-additionally reports p50/p99 request latency from its telemetry. The
-``ratio/bg_async_vs_sync_engine`` row gates the PR-3 claim on any machine:
-the async pipeline must sustain at least the synchronous engine's
-throughput (floor 1.0; measured ~1.3-1.9x on CPU hosts, where stacking and
-result realization are a large fraction of the interpret-mode batch cycle).
-A second, informational row times the temporal (alpha > 0) multi-stream
-path — the staged grid-EMA dispatch — through the same async front.
+additionally reports p50/p99 request latency from its telemetry, and the
+end-of-run ``stats()`` dict is exported as ``bg_video/stats_*`` rows so the
+serving telemetry lands in the ``BENCH_<ts>.json`` perf trajectory instead
+of evaporating with the process. The ``ratio/bg_async_vs_sync_engine`` row
+gates the PR-3 claim on any machine: the async pipeline must sustain at
+least the synchronous engine's throughput (floor 1.0; measured ~1.3-1.9x on
+CPU hosts, where stacking and result realization are a large fraction of
+the interpret-mode batch cycle).
+
+The ``ratio/bg_temporal_fused_vs_staged`` row gates the PR-4 warm path: one
+warm multi-stream pack dispatched through the fused temporal kernel (the
+in-VMEM grid EMA, one kernel for GC||GF||EMA||TI) must beat the same pack
+through the staged jnp oracle (``grid_create -> grid_blur -> EMA -> slice``,
+grid round-tripping between stages) by the declared floor. Both sides run
+``temporal_denoise`` on identical frames/carries/alphas in the same
+process, so the ratio is a property of the code paths, not the host
+(floor 2.0; measured ~2.4-3x in interpret mode at the gate shape below).
 """
+import gc
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BGConfig, add_gaussian_noise
 from repro.data import synthetic_video
 from repro.serving import AsyncFrameEngine, FrameDenoiseEngine, FrameRequest
-from repro.video import MultiStreamPacker
+from repro.video import MultiStreamPacker, temporal_denoise
 
 # Async >= sync is the PR-3 acceptance floor; the async engine's measured
 # edge comes from hiding host stacking + result realization behind compute,
@@ -38,6 +51,16 @@ from repro.video import MultiStreamPacker
 ASYNC_VS_SYNC_FLOOR = 1.0
 REPS_QUICK, REPS_FULL = 3, 5
 TEMPORAL_ALPHA = 0.6
+# Fused-temporal >= 2x the staged oracle on the same warm pack is the PR-4
+# acceptance floor. Gate shape: a many-stream warm pack (the steady state of
+# a loaded video service) at a paper-range window radius, h ragged wrt r so
+# both paths sweep the same stripe count, batch_tile=pack so the whole pack
+# rides one macro-pipeline sweep. The fused win comes from doing GC/GF/EMA/TI
+# in one kernel over a VMEM-resident grid instead of materializing the
+# staged pipeline's per-stage grids; measured ~2.4-3x in interpret mode.
+TEMPORAL_FUSED_FLOOR = 2.0
+TEMPORAL_GATE_HW_R = (60, 96, 16)
+TEMPORAL_REPS = 9
 
 
 def _traffic(n_streams, frames_per_stream, h, w):
@@ -84,6 +107,11 @@ def _run_async(cfg, arrivals, max_batch, packer=None):
 
 
 def run(quick: bool = False):
+    # Warm-path gate, window 1 of 2 (window 2 runs after the engine benches;
+    # see _temporal_time_window for why the spacing matters)
+    gate = _temporal_gate_setup(quick)
+    tf, ts = _temporal_time_window(gate)
+
     h, w, r = (32, 48, 4) if quick else (64, 96, 6)
     n_streams = 4 if quick else 8
     frames_per_stream = 16 if quick else 12
@@ -136,9 +164,9 @@ def run(quick: bool = False):
         ),
     ]
 
-    # informational: the temporal multi-stream path (staged grid-EMA) through
-    # the same async front — the flicker-suppressing video service mode
-    packer = MultiStreamPacker(cfg)
+    # the temporal multi-stream path (in-kernel fused grid-EMA) through the
+    # same async front — the flicker-suppressing video service mode
+    packer = MultiStreamPacker(cfg, batch_tile=n_streams)
     for s in range(n_streams):
         packer.open(s, alpha=TEMPORAL_ALPHA)
     _run_async(cfg, arrivals, n_streams, packer=packer)  # warm-up
@@ -148,7 +176,115 @@ def run(quick: bool = False):
             f"bg_video/async_temporal_a{TEMPORAL_ALPHA:g}_{tag}",
             dt / n * 1e6,
             f"fps={n / dt:.0f} p50={stats['latency_ms_p50']:.1f}ms "
-            f"p99={stats['latency_ms_p99']:.1f}ms (staged grid-EMA path)",
+            f"p99={stats['latency_ms_p99']:.1f}ms (fused in-kernel grid-EMA)",
         )
     )
+    # serving telemetry -> the BENCH_<ts>.json trajectory (the stats() dict
+    # is otherwise transient); values land in the us_per_call column, units
+    # per row in the derived string
+    for key, unit in (
+        ("mean_batch", "frames/dispatch"),
+        ("dispatches", "count"),
+        ("queue_depth", "requests at drain"),
+        ("deadline_misses", "count"),
+        ("latency_ms_p50", "ms"),
+        ("latency_ms_p99", "ms"),
+    ):
+        rows.append(
+            (
+                f"bg_video/stats_{key}_{tag}",
+                float(stats[key]),
+                f"{unit} — async temporal engine telemetry snapshot",
+            )
+        )
+    # warm-path gate, window 2: per-side minima over both windows
+    tf2, ts2 = _temporal_time_window(gate)
+    rows.extend(_temporal_rows(gate, tf + tf2, ts + ts2))
     return rows
+
+
+def _temporal_gate_setup(quick: bool):
+    """Fixed inputs + timed closures for the warm-path gate (built once; the
+    frames/carries are shared by every timing window)."""
+    h, w, r = TEMPORAL_GATE_HW_R
+    n = 64 if quick else 96
+    cfg = BGConfig(r=r, sigma_s=4.0, sigma_r=60.0)
+    vid = synthetic_video(7, n, h, w, motion=1.5)
+    # device-resident frames: this row gates the *dispatch* (kernel vs staged
+    # pipeline); host->device conversion is identical on both sides and is
+    # already measured by the engine-level rows
+    frames = jnp.stack(
+        [add_gaussian_noise(vid[t], 30.0, seed=t) for t in range(n)]
+    ).block_until_ready()
+    alpha = np.full((n,), TEMPORAL_ALPHA, np.float32)
+    # a real warm carry (one fused warm-up step), shared by both sides
+    _, carry = temporal_denoise(frames, cfg, alpha=TEMPORAL_ALPHA, batch_tile=n)
+
+    def fused():
+        out, new_c = temporal_denoise(
+            frames, cfg, carry=carry, alpha=alpha, batch_tile=n
+        )
+        jax.block_until_ready((out, new_c))
+
+    def staged():
+        out, new_c = temporal_denoise(
+            frames, cfg, carry=carry, alpha=alpha, staged=True
+        )
+        jax.block_until_ready((out, new_c))
+
+    return {"n": n, "tag": f"warm{n}_{h}x{w}_r{r}", "hwr": (h, w, r),
+            "fused": fused, "staged": staged}
+
+
+def _temporal_time_window(gate, reps=TEMPORAL_REPS):
+    """One interleaved best-of-reps timing window; returns (tf, ts) lists.
+
+    Transient host states after heavy load (memory reclaim, turbo/thermal
+    decay on small CI boxes) depress the compute-bound fused side much more
+    than the gather/scatter-latency-bound staged side, skewing the *ratio*,
+    not just the absolute times. The caller therefore times two windows —
+    one before and one after the engine benches, tens of seconds apart —
+    and the per-side minimum over all windows estimates the true dispatch
+    cost (the same best-of principle as the interleaved reps within a
+    window)."""
+    gc.collect()  # prior benches' garbage must not bill this window
+    for _ in range(2):  # re-warm: first executions page code/pools
+        gate["fused"]()
+        gate["staged"]()
+    tf, ts = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        gate["fused"]()
+        tf.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        gate["staged"]()
+        ts.append(time.perf_counter() - t0)
+    return tf, ts
+
+
+def _temporal_rows(gate, tf, ts):
+    n = gate["n"]
+    h, w, r = gate["hwr"]
+    tag = gate["tag"]
+    return [
+        (
+            f"bg_video/temporal_fused_{tag}",
+            min(tf) / n * 1e6,
+            f"fps={n / min(tf):.0f} one-kernel in-VMEM grid-EMA warm path",
+        ),
+        (
+            f"bg_video/temporal_staged_{tag}",
+            min(ts) / n * 1e6,
+            f"fps={n / min(ts):.0f} staged create->blur->EMA->slice oracle",
+        ),
+        (
+            "ratio/bg_temporal_fused_vs_staged",
+            min(ts) / min(tf),
+            f"floor={TEMPORAL_FUSED_FLOOR} fused-temporal/staged dispatch "
+            f"time on one {n}-stream warm pack {h}x{w} r={r} (in-kernel EMA "
+            f"vs grid-visible staged pipeline, same frames/carries/alphas; "
+            f"min over two timing windows)",
+        ),
+    ]
+
+

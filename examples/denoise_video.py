@@ -6,12 +6,15 @@ Three acts:
   1. Temporal grid on a static scene: sweep the EMA weight `a` and show the
      denoised-vs-clean PSNR climbing as the grid accumulates history across
      frames (the anti-flicker effect, measurable as noise suppression).
+     Every alpha rides the fused kernel: the EMA blends the blurred grid
+     planes in VMEM inside the GC||GF||TI macro-pipeline.
   2. a == 0 degenerates to the per-frame fused path, bit-identically — the
      temporal extension costs nothing when it is switched off.
   3. Multi-stream async serving: N panning streams submit frames to the
      AsyncFrameEngine (futures + deadline-aware micro-batching + double-
      buffered host->device feeding); per-stream grids are carried in one
-     stacked array and packed into a single batched dispatch per round.
+     stacked array and the whole pack — warm and cold streams alike — is a
+     single fused-kernel dispatch per round.
 
 Run:  PYTHONPATH=src python examples/denoise_video.py
 """

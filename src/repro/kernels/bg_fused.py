@@ -62,6 +62,34 @@ the grid never leaves VMEM, which is the paper's "low memory footprint"
 property translated to the TPU memory hierarchy. Output stripes are written
 through the revisited output block (last write wins for the warm-up steps).
 
+Temporal path — the in-kernel grid EMA (video warm path)
+--------------------------------------------------------
+``carry=`` + ``alpha=`` grow the same kernel into the one-kernel *video*
+warm path: the per-stream temporal state is the blurred homogeneous grid
+(``(b, gx, gy, gz, 2)``, see ``repro.video.temporal``), and the recursive
+EMA ``G_t = (1 - a) * blur(create(f_t)) + a * G_{t-1}`` is applied plane by
+plane inside the macro-pipeline, in VMEM, right where GF finishes each
+plane:
+
+  step s:   GC(stripe s)    ->  raw plane s complete
+            GF(plane s-1)   ->  B = blurred homogeneous plane s-1
+            EMA(plane s-1)  ->  B' = (1-a)*B + a*C[s-1]   (C = carry operand)
+                                C'[s-1] <- B'             (carry output)
+            TI(stripe s-2)  <-  normalize(B') planes s-2, s-1
+
+so the grid still never round-trips HBM mid-frame: the warm path keeps the
+one-image-read/one-image-write traffic and adds only the grid-sized carry
+(two to three orders of magnitude smaller than the frame) as an extra
+input + output. ``alpha`` is a per-frame vector riding a tiny SMEM block,
+so one dispatch freely mixes warm streams (``a > 0``), cold streams and
+first-frame streams (``a == 0``) — an ``a == 0`` frame's blend is the exact
+float identity ``1.0*B + 0.0*C == B``, making its output *bit-identical* to
+the non-temporal path no matter which streams share the batch (asserted in
+tests/test_temporal_fused.py). When ``h % r == 0`` the temporal grid runs
+one extra drain step so the last carry plane (``gx - 1``, which TI never
+reads but the EMA recursion must still advance) is produced; TI output
+writes are masked off for that step.
+
 Paper normalization mode (eq. 4) only; r*gz is bounded (see common.py), so
 per-step temporaries are O(bt*r*gz*w) — a few MB for full-HD frames at the
 default batch tile.
@@ -114,6 +142,8 @@ def _pipeline_step(
     inv_rs,
     gz,
     split,
+    blend=None,
+    ti_valid=None,
 ):
     """One macro-pipeline advance: GC(s) || GF(s-1) || TI(s-2).
 
@@ -121,6 +151,15 @@ def _pipeline_step(
     acquired (blocked operand or DMA slot) — everything downstream is
     identical between the two input paths, which is what makes them
     bit-equivalent.
+
+    ``blend`` is the temporal hook: a ``(carry_plane, a, carry_out_ref)``
+    triple that EMA-blends the freshly blurred homogeneous plane with the
+    carry plane (``B' = (1-a)*B + a*C``) before TI normalizes it, and stores
+    the blended plane as the new carry. The blend runs on *every* step —
+    the temporal path's extra drain step exists precisely to blend the last
+    carry plane after TI is done. ``ti_valid`` masks the TI output write on
+    that drain step (``None`` = always write, keeping the non-temporal
+    jaxpr unchanged).
     """
     # ---- GC: one dense one-hot z-reduction for all frames, rows and both
     # homogeneous channels at once, then a static row split onto planes
@@ -148,6 +187,28 @@ def _pipeline_step(
     mix = taps[0] * r2 + taps[1] * r1 + taps[2] * r0  # x axis (stripe index)
     mix = conv3_axis(mix, taps, 2)  # z axis (scratch layout (bt, 2, gz, gy))
     mix = conv3_axis(mix, taps, 3)  # y axis
+    if blend is not None:
+        # ---- temporal EMA of the blurred homogeneous plane, in VMEM.
+        # a == 0 frames reduce to the exact float identity 1*mix + 0*carry
+        # == mix (all operands are finite and non-negative), which is what
+        # makes the cold rows of a mixed pack bit-identical to the
+        # non-temporal kernel.
+        carry_plane, a, carry_out_ref = blend
+        # The barriers materialize the two blend products exactly once, so
+        # the stored carry and the TI consumer below derive from identical
+        # bits within a dispatch (XLA would otherwise duplicate the blend
+        # into both fusions with potentially different FMA contraction).
+        # Across *different* dispatch geometries (batch tile, mesh shard)
+        # the carry may still differ by <= 1 ulp — LLVM picks FMA lanes per
+        # loop shape — while the image output is bit-stable; the contract
+        # tests assert image bitwise + carry ulp-tolerance accordingly.
+        # a == 0 stays the exact identity (1*mix + 0*carry == mix) either
+        # way, all operands being finite and non-negative.
+        one_minus_a = jax.lax.optimization_barrier(1.0 - a)
+        mix = jax.lax.optimization_barrier(
+            one_minus_a * mix
+        ) + jax.lax.optimization_barrier(a * carry_plane)
+        carry_out_ref[0, 0] = mix
     b_new = jnp.where(
         mix[:, 0] > 1e-12, mix[:, 1] / jnp.maximum(mix[:, 0], 1e-12), 0.0
     )  # (bt, gz, gy)
@@ -172,7 +233,15 @@ def _pipeline_step(
         wy[0][:, None] * (1.0 - xf)[None, :, None, None]
         + wy[1][:, None] * xf[None, :, None, None]
     )  # (bt, r, gz, w)
-    out_ref[...] = jnp.sum(wz * q, axis=2)
+    sliced = jnp.sum(wz * q, axis=2)
+    if ti_valid is None:
+        out_ref[...] = sliced
+    else:
+        # temporal drain step (h % r == 0 only): the revisited out block
+        # keeps its previous (correct) content when the write is skipped
+        @pl.when(ti_valid)
+        def _write():
+            out_ref[...] = sliced
 
     # ---- rotate the working set (the macro-pipeline advance)
     r2_s[...] = r1
@@ -202,21 +271,28 @@ def _kernel(
     yoh_ref,
     yf_ref,
     xf_ref,
-    out_ref,
-    r2_s,
-    r1_s,
-    apart_s,
-    b1_s,
-    s2_s,
-    s1_s,
-    *,
+    *rest,
     taps,
     inv_rs,
     gz,
     split,
     n_stripes,
+    temporal=False,
 ):
     s = pl.program_id(1)  # stripe index (minor grid dim; program_id(0) = tile)
+    if temporal:
+        # extra operands: carry plane (blocked (1, 1, bt, 2, gz, gy)) and the
+        # per-frame alpha vector (a tiny (1, bt) SMEM block); extra output:
+        # the blended plane written back as the new carry.
+        carry_ref, alpha_ref, out_ref, carry_out_ref, *scratch = rest
+        a = alpha_ref[...].reshape(-1, 1, 1, 1)  # (bt, 1, 1, 1)
+        blend = (carry_ref[0, 0], a, carry_out_ref)
+        ti_valid = s < n_stripes + 2  # mask TI on the extra carry drain step
+    else:
+        out_ref, *scratch = rest
+        blend = None
+        ti_valid = None
+    r2_s, r1_s, apart_s, b1_s, s2_s, s1_s = scratch
 
     @pl.when(s == 0)
     def _init():
@@ -243,6 +319,8 @@ def _kernel(
         inv_rs=inv_rs,
         gz=gz,
         split=split,
+        blend=blend,
+        ti_valid=ti_valid,
     )
 
 
@@ -341,8 +419,10 @@ def bg_fused_kernel_call(
     interpret: bool | None = None,
     batch_tile: int | None = None,
     stream_input: bool = False,
-) -> jnp.ndarray:
-    """Fused BG pipeline, single frame or batch.
+    carry: jnp.ndarray | None = None,
+    alpha: jnp.ndarray | None = None,
+):
+    """Fused BG pipeline, single frame or batch, optionally temporal.
 
     (h, w) -> float32 (h, w); (b, h, w) -> float32 (b, h, w). A single frame
     is exactly the b == 1 batch (same kernel, bit-identical output). Matches
@@ -356,15 +436,30 @@ def bg_fused_kernel_call(
     blocks into VMEM with explicit async copies (prefetching stripe s+1 while
     computing stripe s) instead of relying on Pallas's automatic input
     pipelining — see the module docstring. Bit-identical to the default path.
+
+    ``carry`` + ``alpha`` select the temporal path (see module docstring):
+    ``carry`` is the ``(b, gx, gy, gz, 2)`` stacked blurred-grid EMA state
+    (one row per frame/stream), ``alpha`` the length-``b`` per-frame blend
+    weights; the call then returns ``(out, new_carry)`` instead of ``out``.
+    Frames with ``alpha == 0`` are bit-identical to the non-temporal call,
+    and their new-carry row is exactly the frame's own blurred grid.
     """
     if interpret is None:
         interpret = default_interpret()
+    temporal = carry is not None
+    if temporal and stream_input:
+        raise ValueError("stream_input does not compose with a temporal carry")
+    if temporal != (alpha is not None):
+        raise ValueError("temporal path needs both carry= and alpha= (or neither)")
     squeeze = image.ndim == 2
     if squeeze:
         image = image[None]
+        if temporal:
+            carry = carry[None]
+            alpha = jnp.reshape(alpha, (1,))
     b, h, w = image.shape
     r = cfg.r
-    _, gy, gz = grid_shape(h, w, cfg)
+    gx, gy, gz = grid_shape(h, w, cfg)
     n = -(-h // r)
     hp = n * r
     bt = DEFAULT_BATCH_TILE if batch_tile is None else batch_tile
@@ -394,6 +489,76 @@ def bg_fused_kernel_call(
         pltpu.VMEM((bt, r, w), jnp.float32),  # line buffer stripe s-2
         pltpu.VMEM((bt, r, w), jnp.float32),  # line buffer stripe s-1
     ]
+
+    if temporal:
+        if carry.shape != (b, gx, gy, gz, 2):
+            raise ValueError(
+                f"carry shape {carry.shape} != {(b, gx, gy, gz, 2)} for "
+                f"{(b, h, w)} frames"
+            )
+        if alpha.shape != (b,):
+            raise ValueError(f"alpha shape {alpha.shape} != ({b},)")
+        # (b, gx, gy, gz, 2) -> (nb, gx, bt, 2, gz, gy): plane-major with the
+        # kernel's scratch layout minor, so one block index names the whole
+        # (bt, 2, gz, gy) plane the EMA touches at step s.
+        carry_p = jnp.pad(
+            carry.astype(jnp.float32), ((0, bp - b),) + ((0, 0),) * 4
+        )
+        ck = carry_p.transpose(1, 0, 4, 3, 2)  # (gx, bp, 2, gz, gy)
+        ck = ck.reshape(gx, nb, bt, 2, gz, gy).swapaxes(0, 1)
+        alpha_p = jnp.pad(alpha.astype(jnp.float32), (0, bp - b)).reshape(nb, bt)
+        msk_p = jnp.pad(
+            jnp.ones((b, h, w), jnp.float32), ((0, bp - b), (0, hp - h), (0, 0))
+        )
+        # blurred plane p completes (and its carry blend lands) at step
+        # s = p + 1, so emitting all gx carry planes takes gx + 1 steps:
+        # for ragged h that is the usual n + 2, for h % r == 0 it is one
+        # extra drain step whose TI write is masked off in the kernel.
+        plane_idx = lambda bi, s: (bi, jnp.clip(s - 1, 0, gx - 1), 0, 0, 0, 0)
+        carry_spec = pl.BlockSpec((1, 1, bt, 2, gz, gy), plane_idx)
+        kern = functools.partial(
+            _kernel,
+            taps=taps,
+            inv_rs=1.0 / cfg.range_scale,
+            gz=gz,
+            split=gc_row_split(r),
+            n_stripes=n,
+            temporal=True,
+        )
+        out, ck_new = pl.pallas_call(
+            kern,
+            grid=(nb, gx + 1),
+            in_specs=[
+                frame_spec(lambda bi, s: (bi, jnp.minimum(s, n - 1), 0)),
+                frame_spec(lambda bi, s: (bi, jnp.minimum(s, n - 1), 0)),
+            ]
+            + const_specs
+            + [
+                carry_spec,
+                pl.BlockSpec(
+                    (1, bt), lambda bi, s: (bi, 0), memory_space=pltpu.SMEM
+                ),
+            ],
+            out_specs=[
+                frame_spec(lambda bi, s: (bi, jnp.clip(s - 2, 0, n - 1), 0)),
+                carry_spec,
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((bp, hp, w), jnp.float32),
+                jax.ShapeDtypeStruct((nb, gx, bt, 2, gz, gy), jnp.float32),
+            ],
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(img_p, msk_p, *consts, ck, alpha_p)
+        new_carry = (
+            ck_new.swapaxes(0, 1)
+            .reshape(gx, bp, 2, gz, gy)
+            .transpose(1, 0, 4, 3, 2)[:b]
+        )
+        out = out[:b, :h]
+        if squeeze:
+            return out[0], new_carry[0]
+        return out, new_carry
 
     if stream_input:
         # (bp, hp, w) -> (nb, n, bt, r, w): tile/stripe major so one DMA

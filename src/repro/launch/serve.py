@@ -63,8 +63,10 @@ def serve_frames(args) -> None:
 
 def serve_video(args) -> None:
     """Multi-stream video service smoke: N synthetic streams submit frames at
-    a target per-stream fps into the async engine (temporal grid-EMA per
-    stream when --alpha > 0); prints sustained throughput + latency tail."""
+    a target per-stream fps into the async engine (fused in-kernel temporal
+    grid-EMA per stream when --alpha > 0 — one kernel dispatch per pack,
+    warm and cold streams mixed, stream axis sharded over the local mesh);
+    prints sustained throughput + latency tail."""
     import jax
     import numpy as np
 
@@ -93,14 +95,16 @@ def serve_video(args) -> None:
     # engine: the jit caches are global, but the serving engine's telemetry
     # (p99 must not report compile time) and the temporal stream state
     # (frame 0 must enter each EMA exactly once) start clean.
-    warm_packer = MultiStreamPacker(cfg)
+    warm_packer = MultiStreamPacker(cfg, batch_tile=n_streams)
     for s in range(n_streams):
         warm_packer.open(s, alpha=args.alpha)
     with AsyncFrameEngine(cfg, max_batch=n_streams, packer=warm_packer) as warm:
         for f in [warm.submit(traffic[s][0], stream_id=s) for s in range(n_streams)]:
             f.result()
 
-    packer = MultiStreamPacker(cfg)
+    # batch_tile=n_streams: the whole pack rides one macro-pipeline sweep of
+    # the fused temporal kernel (per-step working set stays O(n*r*w))
+    packer = MultiStreamPacker(cfg, batch_tile=n_streams)
     for s in range(n_streams):
         packer.open(s, alpha=args.alpha)
     eng = AsyncFrameEngine(

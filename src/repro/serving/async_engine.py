@@ -30,9 +30,12 @@ hostage to batch-full, and latency-budgeted requests jump the window.
 Video mode: constructed with a ``repro.video.session.MultiStreamPacker``,
 requests carry a ``stream_id`` and each micro-batch takes at most one frame
 per stream (the temporal recursion is strictly sequential within a stream);
-same-stream repeats are deferred to the next batch. The per-stream grid
-carries chain through JAX's async dataflow, so back-to-back packs still
-overlap.
+same-stream repeats are deferred to the next batch. Every pack is a single
+fused-kernel dispatch — the temporal grid EMA runs inside the kernel
+(``bg_fused_kernel_call(carry=, alpha=)``), so warm and cold streams mix in
+one micro-batch and the pack's stream axis shards over the local mesh. The
+per-stream grid carries chain through JAX's async dataflow, so back-to-back
+packs still overlap.
 
 Telemetry (``stats()``): queue/in-flight depth, dispatch count, mean batch
 size, p50/p99 request latency, deadline misses.

@@ -3,7 +3,11 @@
 Frames are independent, so the TPU analogue of the paper's "add more
 pipeline stages" is pure data parallelism: a 1-D ``batch`` mesh where each
 device runs the whole fused GC||GF||TI macro-pipeline on its slice of the
-frame batch. Nothing in the kernel reads across frames, therefore:
+frame batch. The same holds for the *temporal* video path
+(:func:`bg_temporal_sharded`): the per-stream grid carry and alpha rows
+shard with their stream's frame, so each device advances its streams' EMAs
+locally and still no data crosses the mesh. Nothing in the kernel reads
+across frames, therefore:
 
   * in_specs / out_specs are plain ``P("batch")`` on the frame axis — the
     constant operands (column one-hots, taps) are rebuilt inside the per-shard
@@ -33,7 +37,18 @@ from repro.kernels.bg_fused import bg_fused_kernel_call
 
 from .compat import shard_map
 
-__all__ = ["BATCH_AXIS", "batch_mesh", "shard_batch_call", "bg_denoise_sharded"]
+# jitted so the service exits pay one fused rounding kernel instead of three
+# eager elementwise dispatches over the full batch (the staged oracle
+# quantizes inside its own jit — without this the comparison is lopsided)
+_quantize = jax.jit(quantize_intensity, static_argnames=("cfg",))
+
+__all__ = [
+    "BATCH_AXIS",
+    "batch_mesh",
+    "shard_batch_call",
+    "bg_denoise_sharded",
+    "bg_temporal_sharded",
+]
 
 BATCH_AXIS = "batch"
 
@@ -45,6 +60,27 @@ def batch_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
     if not 1 <= n <= len(devices):
         raise ValueError(f"n_devices={n} not in [1, {len(devices)}]")
     return jax.make_mesh((n,), (BATCH_AXIS,), devices=devices[:n])
+
+
+def _service_mesh(mesh: jax.sharding.Mesh | None) -> jax.sharding.Mesh | None:
+    """Shared mesh default for the service entry points: auto-mesh over all
+    local devices when more than one is present; ``None`` (and size-1
+    meshes, checked by the callers) degrade to the plain single-device
+    call."""
+    if mesh is None and jax.device_count() > 1:
+        return batch_mesh()
+    return mesh
+
+
+def _row_pad(nd: int, n: int) -> int:
+    """Zero rows needed to bring a leading axis of ``n`` up to a device
+    multiple (the shared ragged-batch rule: pad before shard_map, trim
+    after)."""
+    return -(-n // nd) * nd - n
+
+
+def _pad_rows(arr: jnp.ndarray, pad: int) -> jnp.ndarray:
+    return jnp.pad(arr, ((0, pad),) + ((0, 0),) * (arr.ndim - 1))
 
 
 def shard_batch_call(fn, images: jnp.ndarray, mesh: jax.sharding.Mesh) -> jnp.ndarray:
@@ -60,10 +96,8 @@ def shard_batch_call(fn, images: jnp.ndarray, mesh: jax.sharding.Mesh) -> jnp.nd
     cached and jitted per (cfg, mesh, flags).
     """
     axis = mesh.axis_names[0]
-    nd = int(mesh.devices.size)
     b = images.shape[0]
-    bp = -(-b // nd) * nd
-    padded = jnp.pad(images, ((0, bp - b),) + ((0, 0),) * (images.ndim - 1))
+    padded = _pad_rows(images, _row_pad(int(mesh.devices.size), b))
     sharded = shard_map(
         fn, mesh=mesh, in_specs=P(axis), out_specs=P(axis), check_rep=False
     )
@@ -125,8 +159,7 @@ def bg_denoise_sharded(
     squeeze = images.ndim == 2
     if squeeze:
         images = images[None]
-    if mesh is None and jax.device_count() > 1:
-        mesh = batch_mesh()
+    mesh = _service_mesh(mesh)
     if mesh is None or int(mesh.devices.size) == 1:
         out = bg_fused_kernel_call(
             images,
@@ -136,12 +169,95 @@ def bg_denoise_sharded(
             stream_input=stream_input,
         )
     else:
-        nd = int(mesh.devices.size)
         b = images.shape[0]
-        bp = -(-b // nd) * nd
-        padded = jnp.pad(images, ((0, bp - b), (0, 0), (0, 0)))
+        padded = _pad_rows(images, _row_pad(int(mesh.devices.size), b))
         call = _sharded_fused_call(cfg, mesh, interpret, batch_tile, stream_input)
         out = call(padded)[:b]
     if quantize_output:
-        out = quantize_intensity(out, cfg)
+        out = _quantize(out, cfg)
     return out[0] if squeeze else out
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_temporal_call(
+    cfg: BGConfig,
+    mesh: jax.sharding.Mesh,
+    interpret: bool | None,
+    batch_tile: int | None,
+):
+    """Jitted shard_map of the temporal fused kernel, cached per
+    (cfg, mesh, flags) — same rationale as :func:`_sharded_fused_call`: the
+    video packer dispatches once per pack, and repeat dispatches must hit
+    the compiled executable, not rebuild the shard_map wrapper."""
+
+    def call(frames, carry, alpha):
+        return bg_fused_kernel_call(
+            frames,
+            cfg,
+            interpret=interpret,
+            batch_tile=batch_tile,
+            carry=carry,
+            alpha=alpha,
+        )
+
+    axis = mesh.axis_names[0]
+    spec = P(axis)
+    return jax.jit(
+        shard_map(
+            call,
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=(spec, spec),
+            check_rep=False,
+        )
+    )
+
+
+def bg_temporal_sharded(
+    frames: jnp.ndarray,
+    carry: jnp.ndarray,
+    alpha: jnp.ndarray,
+    cfg: BGConfig,
+    mesh: jax.sharding.Mesh | None = None,
+    *,
+    interpret: bool | None = None,
+    batch_tile: int | None = None,
+    quantize_output: bool = False,
+):
+    """Data-parallel temporal fused BG denoise: the video warm-path entry.
+
+    ``frames`` is the ``(n, h, w)`` one-frame-per-stream pack, ``carry`` the
+    stacked ``(n, gx, gy, gz, 2)`` blurred-grid EMA states and ``alpha`` the
+    length-n per-stream blend weights. Returns ``(out, new_carry)``: the
+    stream axis shards exactly like the per-frame batch axis (carry/alpha
+    rows travel with their stream's device), zero collectives cross the
+    mesh, and ragged packs are padded with zero frames / zero carries / zero
+    alphas that are dropped after. The *image output* is bit-identical to
+    ``bg_fused_kernel_call(frames, cfg, carry=..., alpha=...)`` for every
+    (n, device-count) pair; the carry agrees to <= 1 ulp when the per-shard
+    dispatch geometry differs from the single-device tiling (LLVM FMA-lane
+    selection in the in-kernel blend — see the bg_fused blend comment) and
+    bit-exactly otherwise. ``mesh=None`` auto-meshes over all local devices;
+    one device degrades to the plain call.
+    """
+    mesh = _service_mesh(mesh)
+    if mesh is None or int(mesh.devices.size) == 1:
+        out, new_carry = bg_fused_kernel_call(
+            frames,
+            cfg,
+            interpret=interpret,
+            batch_tile=batch_tile,
+            carry=carry,
+            alpha=alpha,
+        )
+    else:
+        n = frames.shape[0]
+        pad = _row_pad(int(mesh.devices.size), n)
+        call = _sharded_temporal_call(cfg, mesh, interpret, batch_tile)
+        out, new_carry = call(
+            _pad_rows(frames, pad), _pad_rows(carry, pad), _pad_rows(alpha, pad)
+        )
+        out, new_carry = out[:n], new_carry[:n]
+    if quantize_output:
+        out = _quantize(out, cfg)
+    return out, new_carry

@@ -5,19 +5,20 @@ with its own temporal state. The throughput lever from PR 1/2 is batching —
 one dispatch per micro-batch — so the packer turns "one frame from each live
 stream" into exactly that: frames stack on a leading stream axis, the
 per-stream blurred-grid carries stack into one ``(n, gx, gy, gz, 2)`` array,
-and a per-stream alpha vector lets warm streams (``a_s``) and first-frame
-streams (forced ``a = 0``) share the dispatch. Temporal state never crosses
-streams: row i of the stacked carry is read and written only by stream i
-(asserted in tests/test_video.py).
+and a per-stream alpha vector lets warm streams (``a_s``), cold streams and
+first-frame streams (forced ``a = 0``) share the dispatch. Temporal state
+never crosses streams: row i of the stacked carry is read and written only
+by stream i (asserted in tests/test_video.py).
 
-``alpha == 0`` streams always ride the fused per-frame kernel path — their
-output is bit-identical to the per-frame service *no matter which streams
-share the micro-batch* (batch composition is timing-dependent under the
-async engine, and the staged pipeline matches the fused kernel only to float
-tolerance). A pack that mixes cold and warm streams therefore issues two
-dispatches, one fused (cold) + one staged temporal (warm); uniform packs —
-the steady state of a homogeneous service — stay a single dispatch, and an
-all-cold pack never materializes a carry at all.
+Every pack is **one dispatch**. The temporal EMA now runs inside the fused
+kernel (``bg_fused_kernel_call(carry=, alpha=)``), where an ``a == 0`` row's
+blend is the exact float identity — so cold streams stay bit-identical to
+the per-frame fused service *no matter which warm streams share the
+micro-batch* (batch composition is timing-dependent under the async engine),
+without the two-dispatch cold/warm split this packer needed while the warm
+path lived on the staged jnp pipeline. A pack whose streams are all cold
+(no session holds a carry, every alpha is 0) short-circuits to the carry-free
+per-frame path and never materializes temporal state at all.
 """
 from __future__ import annotations
 
@@ -61,11 +62,13 @@ class MultiStreamPacker:
         cfg: BGConfig,
         mesh=None,
         interpret: Optional[bool] = None,
+        batch_tile: Optional[int] = None,
         quantize_output: bool = True,
     ):
         self.cfg = cfg
         self.mesh = mesh
         self.interpret = interpret
+        self.batch_tile = batch_tile
         self.quantize_output = quantize_output
         self.sessions: Dict[Hashable, StreamSession] = {}
 
@@ -106,40 +109,39 @@ class MultiStreamPacker:
         if len(shapes) != 1 or len(next(iter(shapes))) != 2:
             raise ValueError(f"pack needs equal (h, w) frames, got {sorted(shapes)}")
         sessions = {s: self.sessions[s] for s in sids}
-        # alpha == 0 streams ALWAYS ride the fused per-frame path — their
-        # output bits must not depend on which warm streams happen to share
-        # the micro-batch (the staged pipeline agrees with the fused kernel
-        # only to float tolerance, and batch composition is timing-dependent
-        # under the async engine). Mixed packs therefore split into one fused
-        # dispatch (cold streams) + one staged temporal dispatch (warm
-        # streams); uniform packs stay a single dispatch.
-        cold = [s for s in sids if sessions[s].alpha == 0.0]
+        batch = jnp.stack([arrs[s] for s in sids])
         warm = [s for s in sids if sessions[s].alpha > 0.0]
         results = {}
 
-        if cold:
+        if not warm:
+            # all-cold pack: the carry-free per-frame fused path — nothing
+            # temporal is materialized anywhere (temporal_denoise contract)
             out, _ = temporal_denoise(
-                jnp.stack([arrs[s] for s in cold]),
+                batch,
                 self.cfg,
                 alpha=0.0,
                 mesh=self.mesh,
                 interpret=self.interpret,
+                batch_tile=self.batch_tile,
                 quantize_output=self.quantize_output,
             )
-            for i, s in enumerate(cold):
+            for i, s in enumerate(sids):
                 results[s] = out[i]
-        if warm:
-            batch = jnp.stack([arrs[s] for s in warm])
+        else:
+            # ONE dispatch for the whole pack: the fused kernel's in-kernel
+            # EMA takes a per-stream alpha row, and a == 0 rows (cold
+            # streams, first temporal frames) are bit-identical to the
+            # per-frame path, so cold and warm streams mix freely.
             h, w = batch.shape[1:]
             zero = jnp.zeros(carry_shape(h, w, self.cfg), jnp.float32)
             carry = jnp.stack(
                 [zero if sessions[s].carry is None else sessions[s].carry
-                 for s in warm]
+                 for s in sids]
             )
             # first temporal frame of a stream: no history, blend weight 0
             alpha = np.asarray(
                 [sessions[s].alpha if sessions[s].carry is not None else 0.0
-                 for s in warm],
+                 for s in sids],
                 np.float32,
             )
             out, new_carry = temporal_denoise(
@@ -149,11 +151,15 @@ class MultiStreamPacker:
                 alpha=alpha,
                 mesh=self.mesh,
                 interpret=self.interpret,
+                batch_tile=self.batch_tile,
                 quantize_output=self.quantize_output,
             )
-            for i, s in enumerate(warm):
+            for i, s in enumerate(sids):
                 results[s] = out[i]
-                sessions[s].carry = new_carry[i]
+                if sessions[s].alpha > 0.0:
+                    # cold sessions stay carry-free (the per-frame path
+                    # needs no history); warm sessions advance their EMA
+                    sessions[s].carry = new_carry[i]
         for s in sids:
             sessions[s].frames_seen += 1
         return results

@@ -20,18 +20,26 @@ zero. The EMA runs on the grid, which is ``O(gx*gy*gz)`` — two to three
 orders of magnitude smaller than the frame — so the temporal extension adds
 no per-pixel work beyond the per-frame pipeline ("zero extra kernel cost").
 
-``a == 0`` degenerates to ``G_t = B_t``: the per-frame pipeline. For that
-case :func:`temporal_denoise` does not emulate the reduction — it dispatches
-the existing fused kernel path (``bg_denoise_sharded``) directly, so the
-output is *bit-identical* to the per-frame service path (asserted in
-tests/test_video.py), and no grid is materialized at all.
+Dispatch: every alpha rides the fused kernel. Since the EMA moved *into*
+the fused macro-pipeline (``bg_fused_kernel_call(carry=, alpha=)`` blends
+each blurred plane in VMEM right before TI slices it — see the
+``repro.kernels.bg_fused`` docstring), the warm path no longer falls back to
+the staged jnp pipeline: one kernel dispatch per pack, grid never leaving
+on-chip memory, per-stream alpha vector mixing warm (``a > 0``), cold and
+first-frame (``a == 0``) streams freely. An ``a == 0`` frame's in-kernel
+blend is the exact float identity, so its output stays *bit-identical* to
+the per-frame fused service no matter which streams share the pack — the
+property that previously forced :class:`repro.video.session.MultiStreamPacker`
+to split mixed packs into two dispatches. A pure cold pack (no carry at all)
+still short-circuits to ``bg_denoise_sharded`` and materializes nothing
+temporal. The pack's stream axis shards over the ``("batch",)`` mesh via
+:func:`repro.sharding.bg_shard.bg_temporal_sharded` (carries travel with
+their stream's device, zero collectives).
 
-For ``a > 0`` the grid must be visible between GF and TI, so the blend runs
-on the staged jnp pipeline (vmapped ``grid_create -> grid_blur``), which
-shares every building block with the reference path. Multi-stream batches
-stack the per-stream carries on a leading stream axis; per-stream ``a``
-vectors let one dispatch mix warm streams (``a_s``) and first-frame streams
-(forced ``a = 0``, see :mod:`repro.video.session`).
+The staged jnp pipeline (vmapped ``grid_create -> grid_blur``, blend, slice)
+remains available as ``staged=True`` — it is the *reference oracle* the
+fused path is tested against (the two agree to ~5e-3 pre-quantization; the
+fused path is authoritative in service).
 """
 from __future__ import annotations
 
@@ -44,14 +52,15 @@ import numpy as np
 
 from repro.core.bilateral_grid import (
     BGConfig,
-    grid_blur,
-    grid_create,
+    _round_half_up,
+    conv3_axis,
+    gaussian_taps,
     grid_normalize,
     grid_shape,
     grid_slice,
     quantize_intensity,
 )
-from repro.sharding.bg_shard import bg_denoise_sharded
+from repro.sharding.bg_shard import bg_denoise_sharded, bg_temporal_sharded
 
 __all__ = ["blurred_grid_batch", "carry_shape", "temporal_denoise"]
 
@@ -68,9 +77,29 @@ def blurred_grid_batch(frames: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
     """(n, h, w) frames -> (n, gx, gy, gz, 2) blurred homogeneous grids.
 
     One ``B_t = blur(create(f_t))`` per frame — the quantity the temporal EMA
-    is defined over."""
+    is defined over. The GC cell indices for the spatial axes and the GF taps
+    are frame-independent, so they are built once and shared by the whole
+    batch (a ``vmap`` over ``grid_create``/``grid_blur`` would replicate
+    them per frame — the same constant-hoisting the fused kernel applies to
+    its column one-hots); only the intensity binning and the scatter itself
+    are per-frame. Matches the per-frame ``grid_blur(grid_create(f))``
+    exactly (same scatter order, same separable conv order x->y->z).
+    """
     frames = frames.astype(jnp.float32)
-    return jax.vmap(lambda f: grid_blur(grid_create(f, cfg), cfg))(frames)
+    b, h, w = frames.shape
+    gx, gy, gz = grid_shape(h, w, cfg)
+    # shared spatial cell indices (constants across the batch)
+    xg = _round_half_up(jnp.arange(h, dtype=jnp.float32) / cfg.r).astype(jnp.int32)
+    yg = _round_half_up(jnp.arange(w, dtype=jnp.float32) / cfg.r).astype(jnp.int32)
+    zg = _round_half_up(frames / cfg.range_scale).astype(jnp.int32)  # (b, h, w)
+    bi = jax.lax.broadcasted_iota(jnp.int32, (b, h, w), 0)
+    vals = jnp.stack([jnp.ones((b, h, w), jnp.float32), frames], axis=-1)
+    grid = jnp.zeros((b, gx, gy, gz, 2), jnp.float32)
+    grid = grid.at[bi, xg[None, :, None], yg[None, None, :], zg].add(vals)
+    taps = gaussian_taps(cfg)  # built once, not once per frame
+    for axis in (1, 2, 3):  # batched layout (b, gx, gy, gz, 2)
+        grid = conv3_axis(grid, taps, axis)
+    return grid
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "quantize_output"))
@@ -81,6 +110,7 @@ def _temporal_step(
     cfg: BGConfig,
     quantize_output: bool,
 ):
+    """The staged reference oracle: grid visible between GF and TI."""
     frames = frames.astype(jnp.float32)
     blurred = blurred_grid_batch(frames, cfg)
     a = alpha.astype(jnp.float32).reshape((-1, 1, 1, 1, 1))
@@ -100,7 +130,9 @@ def temporal_denoise(
     *,
     mesh=None,
     interpret: Optional[bool] = None,
+    batch_tile: Optional[int] = None,
     quantize_output: bool = True,
+    staged: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """One temporal step for a pack of streams: denoise + advance the carry.
 
@@ -113,13 +145,22 @@ def temporal_denoise(
         (the blend then reduces to ``B_t``; the packer arranges this).
       alpha: scalar or length-n host-side blend weights in ``[0, 1)``.
         ``alpha`` is configuration, not data — it must not be a traced value.
+      batch_tile: frames per fused-kernel grid step (see
+        ``bg_fused_kernel_call``); a video service packing n modest-sized
+        streams can set ``batch_tile=n`` so the whole pack sweeps the
+        macro-pipeline in one tile. Ignored by the staged oracle.
+      staged: run the staged jnp reference pipeline instead of the fused
+        temporal kernel. The oracle for tests/benchmarks only — the fused
+        path is the service path for every alpha.
 
     Returns ``(out, new_carry)``. When ``carry is None`` and every alpha is
-    zero (a pure per-frame pack) the fused kernel path is dispatched instead
-    of the staged pipeline: the output is bit-identical to
+    zero (a pure per-frame pack) the fused kernel path is dispatched with no
+    carry at all: the output is bit-identical to
     ``bg_denoise_sharded(frames, ...)`` and ``new_carry`` is ``None`` —
     nothing temporal was computed, which is exactly the "reduces to the
-    per-frame path at a == 0" contract.
+    per-frame path at a == 0" contract. Otherwise the fused temporal kernel
+    runs the EMA in VMEM (``a == 0`` rows still bit-identical to the
+    per-frame path) and the stream axis shards over the mesh.
     """
     frames = jnp.asarray(frames)
     squeeze = frames.ndim == 2
@@ -132,12 +173,13 @@ def temporal_denoise(
     if np.any(alpha_np < 0.0) or np.any(alpha_np >= 1.0):
         raise ValueError(f"temporal alpha must be in [0, 1), got {alpha}")
 
-    if carry is None and not alpha_np.any():
+    if carry is None and not alpha_np.any() and not staged:
         out = bg_denoise_sharded(
             frames,
             cfg,
             mesh=mesh,
             interpret=interpret,
+            batch_tile=batch_tile,
             quantize_output=quantize_output,
         )
         return (out[0] if squeeze else out), None
@@ -149,7 +191,19 @@ def temporal_denoise(
         alpha_np = np.zeros((n,), np.float32)
     if carry.shape[0] != n:
         raise ValueError(f"carry leading axis {carry.shape[0]} != n frames {n}")
-    out, new_carry = _temporal_step(
-        frames, carry, jnp.asarray(alpha_np), cfg, quantize_output
-    )
+    if staged:
+        out, new_carry = _temporal_step(
+            frames, carry, jnp.asarray(alpha_np), cfg, quantize_output
+        )
+    else:
+        out, new_carry = bg_temporal_sharded(
+            frames,
+            carry,
+            jnp.asarray(alpha_np),
+            cfg,
+            mesh=mesh,
+            interpret=interpret,
+            batch_tile=batch_tile,
+            quantize_output=quantize_output,
+        )
     return (out[0] if squeeze else out), new_carry

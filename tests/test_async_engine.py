@@ -3,13 +3,18 @@ ordering, backpressure, deadlines, and argument validation.
 
 Wall-clock-sensitive tests (those asserting *when* a dispatch happens, not
 just that it happens) carry ``@pytest.mark.timing`` so loaded CI runners can
-run the suite with ``-m "not timing"``. Everything else is scheduling-order
+run the suite with ``-m "not timing"``. When they do run, their wall-clock
+budgets auto-relax with the host's run-queue pressure (``os.getloadavg``),
+and they skip outright on a heavily oversubscribed host — a scheduling-delay
+assertion says nothing about the code when every thread is time-slicing
+(see :func:`_timing_relax`). Everything else is scheduling-order
 independent: futures resolve whenever the background threads get there.
 
 On a multi-device host (the forced 8-device CI mesh) the engine auto-builds
 a batch mesh and every dispatch goes through ``bg_denoise_sharded`` — the
 same assertions hold because sharding is bit-invisible (test_bg_sharded.py).
 """
+import os
 import queue
 import time
 
@@ -22,6 +27,33 @@ from repro.serving import AsyncFrameEngine, FrameDenoiseEngine, FrameRequest
 from repro.video import MultiStreamPacker
 
 CFG = BGConfig(r=4, sigma_s=4.0, sigma_r=60.0)
+
+# per-CPU 1-minute load above which wall-clock assertions are meaningless
+# (every thread is time-slicing; dispatch latency measures the scheduler,
+# not the engine) — skip rather than flake
+_TIMING_SKIP_LOAD = 4.0
+
+
+def _timing_relax() -> float:
+    """Budget multiplier for wall-clock assertions on a contended host.
+
+    Returns ``max(1, per-cpu 1-minute load)``: a box running at 2x
+    oversubscription legitimately doubles thread wake-up latency, so the
+    deadline/window budgets scale with it instead of flaking. Sampled
+    *before* the timed section (load is backward-looking). Skips the caller
+    when the host is so loaded the assertion would only measure contention.
+    """
+    try:
+        load = os.getloadavg()[0] / max(os.cpu_count() or 1, 1)
+    except (AttributeError, OSError):  # platform without getloadavg
+        return 1.0
+    if load > _TIMING_SKIP_LOAD:
+        pytest.skip(
+            f"host oversubscribed (load/cpu = {load:.1f} > "
+            f"{_TIMING_SKIP_LOAD}): wall-clock assertions measure the "
+            f"scheduler, not the engine"
+        )
+    return max(1.0, load)
 
 
 def _frames(n, h=32, w=48, seed=0):
@@ -166,19 +198,26 @@ def test_validation_and_lifecycle():
 
 @pytest.mark.timing
 def test_deadline_forces_early_dispatch():
-    """A lone frame with a 30ms budget must not wait out a 500ms window."""
+    """A lone frame with a 30ms budget must not wait out the batch window.
+
+    The window scales with the load relaxation alongside the assertion
+    budget, so the pass/fail gap (budget < window) survives any relax
+    factor — a broken deadline path always waits out the full window and
+    always overshoots the budget."""
+    relax = _timing_relax()  # sample load before the timed section
     frames = _frames(1)
-    with AsyncFrameEngine(CFG, max_batch=64, batch_window_ms=500.0) as eng:
+    with AsyncFrameEngine(CFG, max_batch=64, batch_window_ms=500.0 * relax) as eng:
         eng.submit(frames[0]).result()  # warm-up compile outside the clock
         t0 = time.monotonic()
         eng.submit(frames[0], deadline_ms=30.0).result()
         dt = time.monotonic() - t0
-    assert dt < 0.4, f"deadline ignored: {dt * 1e3:.0f}ms"
+    assert dt < 0.4 * relax, f"deadline ignored: {dt * 1e3:.0f}ms (relax={relax:.1f})"
 
 
 @pytest.mark.timing
 def test_batch_window_expiry_dispatches_partial_batch():
     """Low traffic: a never-full batch still dispatches after the window."""
+    relax = _timing_relax()  # sample load before the timed section
     frames = _frames(2)
     with AsyncFrameEngine(CFG, max_batch=64, batch_window_ms=40.0) as eng:
         eng.submit(frames[0]).result()  # warm-up compile outside the clock
@@ -187,4 +226,4 @@ def test_batch_window_expiry_dispatches_partial_batch():
         dt = time.monotonic() - t0
         st = eng.stats()
     assert out.shape == frames[1].shape
-    assert st["mean_batch"] == 1.0 and dt < 2.0
+    assert st["mean_batch"] == 1.0 and dt < 2.0 * relax

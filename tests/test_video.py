@@ -4,8 +4,9 @@ The contracts under test:
   * ``alpha == 0`` is the per-frame fused service path, *bit-identically*,
     across ragged multi-stream shapes (h % r != 0, w % r != 0, n odd) — the
     temporal subsystem must cost nothing when switched off;
-  * a warm-up pack (``alpha > 0``, no history) equals the staged jnp
-    reference exactly (effective alpha 0 for the first frame);
+  * a warm-up pack (``alpha > 0``, no history) is bit-identical to the
+    per-frame fused path (effective alpha 0 on the fused temporal kernel),
+    while the ``staged=True`` oracle still equals the jnp reference exactly;
   * on a static scene, PSNR improves monotonically with alpha (the EMA
     accumulates evidence instead of flickering);
   * per-stream carries never leak across streams in the multi-stream packer;
@@ -19,7 +20,12 @@ from repro.core import BGConfig, add_gaussian_noise, bilateral_grid_filter, psnr
 from repro.core.bilateral_grid import quantize_intensity
 from repro.data import synthetic_video
 from repro.kernels import bg_fused
-from repro.video import MultiStreamPacker, carry_shape, temporal_denoise
+from repro.video import (
+    MultiStreamPacker,
+    blurred_grid_batch,
+    carry_shape,
+    temporal_denoise,
+)
 
 CFG = BGConfig(r=6, sigma_s=4.0, sigma_r=60.0)
 
@@ -53,14 +59,36 @@ def test_alpha0_single_frame_squeeze():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
-def test_warmup_pack_matches_staged_reference():
-    """alpha > 0 with no history: effective alpha 0, staged pipeline — must
-    equal the jnp reference per frame, and must emit a carry."""
+def test_warmup_pack_matches_fused_per_frame():
+    """alpha > 0 with no history: effective alpha 0 on the fused temporal
+    kernel — bit-identical to the per-frame fused path, and must emit a
+    carry. The staged oracle (staged=True) still equals the jnp reference
+    exactly, and the fused carry tracks the staged carry."""
     frames = _noisy_stack(3, 45, 55)
-    out, carry = temporal_denoise(frames, CFG, alpha=0.5)
+    out, carry = temporal_denoise(frames, CFG, alpha=0.5, interpret=True)
     assert carry.shape == (3,) + carry_shape(45, 55, CFG)
-    ref = jnp.stack([bilateral_grid_filter(frames[i], CFG) for i in range(3)])
+    ref = quantize_intensity(bg_fused(frames, CFG, interpret=True), CFG)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    out_s, carry_s = temporal_denoise(frames, CFG, alpha=0.5, staged=True)
+    ref_s = jnp.stack([bilateral_grid_filter(frames[i], CFG) for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(ref_s))
+    np.testing.assert_allclose(
+        np.asarray(carry), np.asarray(carry_s), atol=2e-2, rtol=1e-4
+    )
+
+
+def test_blurred_grid_batch_matches_per_frame_reference():
+    """The hoisted batched GC+GF (shared cell indices/taps, one batched
+    scatter + batched convs) must equal the per-frame staged pipeline
+    exactly — it is the definition of the quantity the EMA carries."""
+    from repro.core.bilateral_grid import grid_blur, grid_create
+
+    frames = _noisy_stack(4, 33, 47)
+    ref = jnp.stack([grid_blur(grid_create(f, CFG), CFG) for f in frames])
+    np.testing.assert_array_equal(
+        np.asarray(blurred_grid_batch(frames, CFG)), np.asarray(ref)
+    )
 
 
 def test_alpha_validation():
