@@ -151,9 +151,9 @@ def run(quick: bool = False):
         (
             f"bg_video/async_engine_{tag}",
             min(t_async) / n * 1e6,
-            f"fps={fps_async:.0f} p50={stats['latency_ms_p50']:.1f}ms "
-            f"p99={stats['latency_ms_p99']:.1f}ms "
-            f"mean_batch={stats['mean_batch']:.1f}",
+            f"fps={fps_async:.0f} p50={stats.latency_ms_p50:.1f}ms "
+            f"p99={stats.latency_ms_p99:.1f}ms "
+            f"mean_batch={stats.mean_batch:.1f}",
         ),
         (
             "ratio/bg_async_vs_sync_engine",
@@ -175,13 +175,14 @@ def run(quick: bool = False):
         (
             f"bg_video/async_temporal_a{TEMPORAL_ALPHA:g}_{tag}",
             dt / n * 1e6,
-            f"fps={n / dt:.0f} p50={stats['latency_ms_p50']:.1f}ms "
-            f"p99={stats['latency_ms_p99']:.1f}ms (fused in-kernel grid-EMA)",
+            f"fps={n / dt:.0f} p50={stats.latency_ms_p50:.1f}ms "
+            f"p99={stats.latency_ms_p99:.1f}ms (fused in-kernel grid-EMA)",
         )
     )
-    # serving telemetry -> the BENCH_<ts>.json trajectory (the stats() dict
-    # is otherwise transient); values land in the us_per_call column, units
-    # per row in the derived string
+    # serving telemetry -> the BENCH_<ts>.json trajectory (the EngineStats
+    # snapshot is otherwise transient); values land in the us_per_call
+    # column, units per row in the derived string
+    stat_values = stats.as_dict()
     for key, unit in (
         ("mean_batch", "frames/dispatch"),
         ("dispatches", "count"),
@@ -193,8 +194,9 @@ def run(quick: bool = False):
         rows.append(
             (
                 f"bg_video/stats_{key}_{tag}",
-                float(stats[key]),
-                f"{unit} — async temporal engine telemetry snapshot",
+                float(stat_values[key]),
+                f"{unit} — async temporal engine telemetry snapshot "
+                f"(serving.EngineStats)",
             )
         )
     # warm-path gate, window 2: per-side minima over both windows
@@ -205,10 +207,22 @@ def run(quick: bool = False):
 
 def _temporal_gate_setup(quick: bool):
     """Fixed inputs + timed closures for the warm-path gate (built once; the
-    frames/carries are shared by every timing window)."""
+    frames/carries are shared by every timing window).
+
+    Both sides dispatch prebuilt ``BGPlan``s — the post-refactor service
+    path — so the row times the two *compiled dispatch paths* (in-kernel
+    EMA vs the grid-visible staged pipeline) on identical
+    frames/carries/alphas, with no per-call shim or plan-construction cost
+    on either side."""
+    from repro.plan import BGPlan, plan_for
+
     h, w, r = TEMPORAL_GATE_HW_R
     n = 64 if quick else 96
     cfg = BGConfig(r=r, sigma_s=4.0, sigma_r=60.0)
+    fused_plan = plan_for(
+        cfg, h, w, n_frames=n, temporal=True, sharded=False, batch_tile=n
+    )
+    staged_plan = BGPlan(cfg=cfg, backend="reference", temporal=True)
     vid = synthetic_video(7, n, h, w, motion=1.5)
     # device-resident frames: this row gates the *dispatch* (kernel vs staged
     # pipeline); host->device conversion is identical on both sides and is
@@ -216,21 +230,17 @@ def _temporal_gate_setup(quick: bool):
     frames = jnp.stack(
         [add_gaussian_noise(vid[t], 30.0, seed=t) for t in range(n)]
     ).block_until_ready()
-    alpha = np.full((n,), TEMPORAL_ALPHA, np.float32)
+    alpha = jnp.asarray(np.full((n,), TEMPORAL_ALPHA, np.float32))
     # a real warm carry (one fused warm-up step), shared by both sides
-    _, carry = temporal_denoise(frames, cfg, alpha=TEMPORAL_ALPHA, batch_tile=n)
+    _, carry = temporal_denoise(
+        frames, alpha=TEMPORAL_ALPHA, plan=fused_plan
+    )
 
     def fused():
-        out, new_c = temporal_denoise(
-            frames, cfg, carry=carry, alpha=alpha, batch_tile=n
-        )
-        jax.block_until_ready((out, new_c))
+        jax.block_until_ready(fused_plan(frames, carry=carry, alpha=alpha))
 
     def staged():
-        out, new_c = temporal_denoise(
-            frames, cfg, carry=carry, alpha=alpha, staged=True
-        )
-        jax.block_until_ready((out, new_c))
+        jax.block_until_ready(staged_plan(frames, carry=carry, alpha=alpha))
 
     return {"n": n, "tag": f"warm{n}_{h}x{w}_r{r}", "hwr": (h, w, r),
             "fused": fused, "staged": staged}

@@ -29,7 +29,7 @@ from repro.core import (
     synthetic_batch,
 )
 from repro.kernels import bilateral_grid_filter_pallas
-from repro.sharding.bg_shard import bg_denoise_sharded
+from repro.plan import plan_for
 
 
 def main():
@@ -43,11 +43,18 @@ def main():
     clean = synthetic_batch(n_frames, h, w, seed=0)
     noisy = add_gaussian_noise(clean, 30.0, seed=100)
 
+    # one compiled plan for the whole run: the plan layer picks the backend
+    # and auto-tunes the fused-kernel batch tile from the frame geometry
+    # (sharded=False here so the single-device/sharded comparison below is
+    # explicit; sharding is its own plan further down)
+    plan = plan_for(cfg, h, w, n_frames=n_frames, sharded=False)
+    print(f"plan: backend={plan.backend} batch_tile={plan.batch_tile}")
+
     # batched fused path: all frames in one dispatch
-    out_b = bilateral_grid_filter_pallas(noisy, cfg)
+    out_b = plan(noisy)
     jax.block_until_ready(out_b)  # warm-up/compile
     t0 = time.perf_counter()
-    out_b = bilateral_grid_filter_pallas(noisy, cfg)
+    out_b = plan(noisy)
     jax.block_until_ready(out_b)
     dt_batch = time.perf_counter() - t0
 
@@ -78,10 +85,11 @@ def main():
     # sharded service path: batch axis over a 1-D device mesh, no collectives
     nd = jax.device_count()
     if nd > 1:
-        out_s = bg_denoise_sharded(noisy, cfg, quantize_output=True)
+        shard_plan = plan_for(cfg, h, w, n_frames=n_frames)  # auto-meshes
+        out_s = shard_plan(noisy)
         jax.block_until_ready(out_s)  # warm-up/compile
         t0 = time.perf_counter()
-        out_s = bg_denoise_sharded(noisy, cfg, quantize_output=True)
+        out_s = shard_plan(noisy)
         jax.block_until_ready(out_s)
         dt_shard = time.perf_counter() - t0
         same = bool(jnp.all(out_s == out_b))

@@ -51,11 +51,11 @@ def main():
         )
 
     # ---- 2. a == 0 is the per-frame fused path, bit-identical ----------
-    from repro.sharding.bg_shard import bg_denoise_sharded
+    from repro.plan import BGPlan
 
     frame = noisy[0]
     out_t, carry = temporal_denoise(frame, cfg, alpha=0.0)
-    ref = bg_denoise_sharded(frame, cfg, quantize_output=True)
+    ref = BGPlan(cfg=cfg, backend="fused")(frame)
     assert carry is None and bool(np.all(np.asarray(out_t) == np.asarray(ref)))
     print("alpha=0 output bit-identical to the per-frame fused path: True")
 
@@ -69,8 +69,16 @@ def main():
              for t in range(N_FRAMES)]
         )
 
+    # plan-driven dispatch: plan_for auto-tunes the fused-kernel batch tile
+    # for the pack geometry; the packer asks the plan for its tile
+    from repro.plan import plan_for
+
+    video_plan = plan_for(cfg, H, W, n_frames=n_streams, temporal=True)
+    print(f"video plan: backend={video_plan.backend} "
+          f"batch_tile={video_plan.batch_tile}")
+
     def fresh_packer():
-        p = MultiStreamPacker(cfg)
+        p = MultiStreamPacker(plan=video_plan)
         for s in range(n_streams):
             p.open(s, alpha=0.6)
         return p
@@ -97,9 +105,9 @@ def main():
     total = len(outs)
     print(
         f"async: {n_streams} streams, {total} frames in {dt * 1e3:.0f}ms "
-        f"({total / dt:.0f} frames/s) — p50={st['latency_ms_p50']:.1f}ms "
-        f"p99={st['latency_ms_p99']:.1f}ms mean_batch={st['mean_batch']:.1f} "
-        f"deadline_misses={st['deadline_misses']}"
+        f"({total / dt:.0f} frames/s) — p50={st.latency_ms_p50:.1f}ms "
+        f"p99={st.latency_ms_p99:.1f}ms mean_batch={st.mean_batch:.1f} "
+        f"deadline_misses={st.deadline_misses}"
     )
 
 

@@ -21,6 +21,7 @@ from repro.core import (
     synthetic_image,
 )
 from repro.kernels import bilateral_grid_filter_pallas
+from repro.plan import plan_for
 
 
 def main():
@@ -28,6 +29,10 @@ def main():
     clean = synthetic_image(h, w)
     noisy = add_gaussian_noise(clean, sigma=30.0)
     cfg = BGConfig(r=7, sigma_s=4.0, sigma_r=50.0)
+
+    # every dispatch decision (backend, batch tile, input streaming, mesh)
+    # lives in one compiled plan — see repro.plan
+    plan = plan_for(cfg, h, w, n_frames=1)
 
     results = {
         "noisy input": noisy,
@@ -37,6 +42,7 @@ def main():
             noisy, BGConfig(r=7, sigma_s=4.0, sigma_r=50.0, weight_mode="pow2")
         ),
         "BG fused Pallas kernel": bilateral_grid_filter_pallas(noisy, cfg),
+        "BG compiled plan (auto-tuned)": plan(noisy),
     }
     print(f"{'variant':34s} {'MSSIM':>8s} {'PSNR':>8s}")
     for name, img in results.items():

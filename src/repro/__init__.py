@@ -1,4 +1,39 @@
 """repro: TPU-native bilateral grid (Hashimoto & Takamaeda-Yamazaki 2021)
-+ multi-pod JAX LM training/serving framework."""
++ multi-pod JAX LM training/serving framework.
 
-__version__ = "1.0.0"
+Dispatch-decision table (the plan layer, ``repro.plan``)
+--------------------------------------------------------
+Every bilateral-grid entry point (``data.pipeline.denoise_batch``,
+``video.temporal.temporal_denoise``, both frame-serving engines, the video
+packer, ``launch.serve``) executes a compiled :class:`repro.plan.BGPlan`;
+legacy per-call kwargs (``use_kernels``/``sharded``/``mesh``/``stream_input``
+/``batch_tile``/``interpret``/``staged``) are deprecation-shimmed onto an
+equivalent plan, bit-identically. Which backend fires for which geometry:
+
+  geometry / intent                     backend (plan_for auto-selection)
+  -----------------------------------   ---------------------------------
+  default service dispatch              "fused" — one GC||GF||TI Pallas
+                                        macro-pipeline kernel, grid in VMEM
+  16*r*w bytes > 256 KiB (full-HD at    "fused_streamed" — fused kernel +
+  paper radii r >= 12, 4K)              explicit 2-slot HBM->VMEM input DMA
+                                        (auto-pipelined blocks over budget)
+  temporal video pack (alpha > 0)       "fused" + temporal=True (in-kernel
+                                        grid-EMA; never input-streamed)
+  numerical oracle / gradients          "reference" (vmapped jnp pipeline;
+                                        + temporal=True = staged EMA oracle)
+  memory-profile studies                "streaming" (lax.scan stripe
+                                        pipeline, Fig. 4 dataflow)
+  unfused perf baseline (bench only)    "staged" (three Pallas kernels,
+                                        grid round-trips HBM)
+  >1 local device                       any of fused/fused_streamed/
+                                        streaming + mesh (1-D batch-axis
+                                        shard_map, zero collectives)
+
+Auto-tuning kicks in inside :func:`repro.plan.plan_for`: ``batch_tile`` is
+the largest tile whose per-step working set fits the documented VMEM-budget
+model (capped at ``ceil(n_frames / mesh_size)``), ``stream_input`` flips on
+per the byte threshold above. See the ``repro.plan`` module docstring for
+the model's term-by-term derivation.
+"""
+
+__version__ = "1.1.0"

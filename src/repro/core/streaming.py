@@ -18,8 +18,6 @@ stripe body here.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -37,23 +35,14 @@ from .bilateral_grid import (
 __all__ = ["bilateral_grid_filter_streaming"]
 
 
-@partial(jax.jit, static_argnames=("cfg", "quantize_output"))
-def _streaming_call(
-    image: jnp.ndarray, cfg: BGConfig, quantize_output: bool = True
-) -> jnp.ndarray:
-    if image.ndim == 3:
-        return jax.vmap(
-            lambda im: _streaming_single(im, cfg, quantize_output)
-        )(image)
-    return _streaming_single(image, cfg, quantize_output)
-
-
 def bilateral_grid_filter_streaming(
     image: jnp.ndarray,
-    cfg: BGConfig,
+    cfg: BGConfig | None = None,
     quantize_output: bool = True,
     sharded: bool = False,
     mesh=None,
+    *,
+    plan=None,
 ) -> jnp.ndarray:
     """Stripe-streaming BG; numerically equivalent to bilateral_grid_filter.
 
@@ -61,24 +50,32 @@ def bilateral_grid_filter_streaming(
     over the scan (the per-frame working set stays O(grid planes + r lines),
     so b frames stream in parallel with a b x working-set footprint).
 
-    ``sharded=True`` shards the batch axis of the vmapped scan over ``mesh``
-    (default: a 1-D mesh over all local devices) — frames are independent, so
-    this is the same collective-free data parallelism as
-    ``repro.sharding.bg_shard``, just over the jnp scan instead of the Pallas
-    kernel. Falls back to the plain call on a single device.
+    Preferred form: pass a ``repro.plan.BGPlan`` with ``backend="streaming"``
+    via ``plan=``. Legacy ``sharded=True`` shards the batch axis of the
+    vmapped scan over ``mesh`` (default: a 1-D mesh over all local devices) —
+    frames are independent, so this is the same collective-free data
+    parallelism as ``repro.sharding.bg_shard``, just over the jnp scan
+    instead of the Pallas kernel. Falls back to the plain call on a single
+    device.
     """
-    if sharded and image.ndim == 3:
-        from repro.sharding.bg_shard import batch_mesh, shard_batch_call
+    from repro.plan import BGPlan, warn_legacy_dispatch
 
-        if mesh is None and jax.device_count() > 1:
+    if plan is None:
+        if cfg is None:
+            raise TypeError("bilateral_grid_filter_streaming needs cfg= or plan=")
+        if sharded or mesh is not None:
+            warn_legacy_dispatch("bilateral_grid_filter_streaming")
+        if sharded and mesh is None and jax.device_count() > 1:
+            from repro.sharding.bg_shard import batch_mesh
+
             mesh = batch_mesh()
-        if mesh is not None and int(mesh.devices.size) > 1:
-            return shard_batch_call(
-                partial(_streaming_call, cfg=cfg, quantize_output=quantize_output),
-                image,
-                mesh,
-            )
-    return _streaming_call(image, cfg, quantize_output)
+        plan = BGPlan(
+            cfg=cfg,
+            backend="streaming",
+            mesh=mesh if sharded else None,
+            quantize_output=quantize_output,
+        )
+    return plan(image)
 
 
 def _streaming_single(

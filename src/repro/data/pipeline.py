@@ -3,40 +3,67 @@
 This is where the paper's contribution plugs into the LM framework
 (DESIGN.md §Arch-applicability): the [vlm] image frontend and the [audio]
 spectrogram frontend both run bilateral-grid denoising before patch/frame
-embedding. Every stage exposes the full dispatch ladder — vmapped jnp
-reference, fused Pallas kernel, or batch-axis device-sharded kernel — via
-``use_kernels=`` / ``sharded=``, so the frontends ride the same hot path the
-serving engine does.
+embedding. Every stage dispatches through the plan layer (``repro.plan``):
+pass a compiled :class:`repro.plan.BGPlan` via ``plan=`` to pick the backend
+(vmapped jnp reference, fused Pallas kernel, batch-axis device-sharded
+kernel, streamed input DMA), or keep using the legacy ``use_kernels=`` /
+``sharded=`` kwargs, which route into an equivalent plan — so the frontends
+ride the same hot path the serving engine does.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bilateral_grid import BGConfig, bilateral_grid_filter
+from repro.core.bilateral_grid import BGConfig
 
 __all__ = ["denoise_batch", "patchify_embed", "vlm_preprocess", "spectrogram_denoise"]
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _denoise_batch_ref(images: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
-    return jax.vmap(lambda im: bilateral_grid_filter(im, cfg))(images)
+def _legacy_plan(
+    cfg: BGConfig,
+    use_kernels: bool,
+    sharded: bool,
+    mesh,
+    stream_input: bool,
+    site: str,
+):
+    """Map the legacy kwarg ladder onto a BGPlan, preserving every pre-plan
+    dispatch decision exactly (reference <- default, fused <- use_kernels,
+    mesh <- sharded, batch_tile None <- the kernel default)."""
+    from repro.plan import BGPlan, warn_legacy_dispatch
+
+    if use_kernels or sharded or stream_input or mesh is not None:
+        warn_legacy_dispatch(site)
+    if sharded:
+        if mesh is None and jax.device_count() > 1:
+            from repro.sharding.bg_shard import batch_mesh
+
+            mesh = batch_mesh()
+        backend = "fused_streamed" if stream_input else "fused"
+        return BGPlan(cfg=cfg, backend=backend, mesh=mesh)
+    if use_kernels:
+        backend = "fused_streamed" if stream_input else "fused"
+        return BGPlan(cfg=cfg, backend=backend)
+    return BGPlan(cfg=cfg, backend="reference")
 
 
 def denoise_batch(
     images: jnp.ndarray,
-    cfg: BGConfig,
+    cfg: BGConfig | None = None,
     use_kernels: bool = False,
     sharded: bool = False,
     mesh=None,
     stream_input: bool = False,
+    *,
+    plan=None,
 ) -> jnp.ndarray:
     """(B, H, W) or color (B, H, W, 3) noisy [0,255] -> denoised batch.
 
+    Preferred form: ``denoise_batch(images, plan=plan)``. Legacy kwargs:
     use_kernels=True feeds the whole batch to the fused Pallas macro-pipeline
     in one dispatch (its native (batch, stripe) grid — constants shared, grid
     in VMEM); the jnp reference path is vmapped per frame. sharded=True
@@ -46,34 +73,18 @@ def denoise_batch(
     double-buffered HBM->VMEM input DMA.
 
     Color frames are denoised per channel by folding the channel axis into
-    the batch axis before the fused/sharded dispatch — the grid stays
-    per-channel (the paper's grayscale pipeline), and channels of one frame
-    may land on different devices, which is fine because frames and channels
-    are equally independent.
+    the batch axis before the dispatch — the grid stays per-channel (the
+    paper's grayscale pipeline), and channels of one frame may land on
+    different devices, which is fine because frames and channels are equally
+    independent.
     """
-    if images.ndim == 4:
-        b, h, w, c = images.shape
-        folded = jnp.moveaxis(images, -1, 1).reshape(b * c, h, w)
-        out = denoise_batch(
-            folded,
-            cfg,
-            use_kernels=use_kernels,
-            sharded=sharded,
-            mesh=mesh,
-            stream_input=stream_input,
+    if plan is None:
+        if cfg is None:
+            raise TypeError("denoise_batch needs cfg= or plan=")
+        plan = _legacy_plan(
+            cfg, use_kernels, sharded, mesh, stream_input, "denoise_batch"
         )
-        return jnp.moveaxis(out.reshape(b, c, h, w), 1, -1)
-    if sharded:
-        from repro.sharding.bg_shard import bg_denoise_sharded
-
-        return bg_denoise_sharded(
-            images, cfg, mesh=mesh, stream_input=stream_input, quantize_output=True
-        )
-    if use_kernels:
-        from repro.kernels import bilateral_grid_filter_pallas
-
-        return bilateral_grid_filter_pallas(images, cfg, stream_input=stream_input)
-    return _denoise_batch_ref(images, cfg)
+    return plan(images)
 
 
 def patchify_embed(
@@ -98,24 +109,31 @@ def patchify_embed(
 
 def vlm_preprocess(
     images: jnp.ndarray,
-    bg_cfg: BGConfig,
+    bg_cfg: BGConfig | None,
     patch: int,
     dim: int,
     denoise: bool = True,
     use_kernels: bool = False,
     sharded: bool = False,
     mesh=None,
+    *,
+    plan=None,
 ) -> jnp.ndarray:
     """Full [vlm] frontend stage: BG denoise -> patchify -> project.
 
-    ``use_kernels``/``sharded`` pick the denoiser dispatch exactly as in
-    :func:`denoise_batch` — the VLM frontend rides the fused (and, on a
-    multi-device host, sharded) kernel path rather than being pinned to the
-    vmapped reference.
+    ``plan=`` (or the legacy ``use_kernels``/``sharded`` kwargs) picks the
+    denoiser dispatch exactly as in :func:`denoise_batch` — the VLM frontend
+    rides the fused (and, on a multi-device host, sharded) kernel path rather
+    than being pinned to the vmapped reference.
     """
     if denoise:
         images = denoise_batch(
-            images, bg_cfg, use_kernels=use_kernels, sharded=sharded, mesh=mesh
+            images,
+            bg_cfg,
+            use_kernels=use_kernels,
+            sharded=sharded,
+            mesh=mesh,
+            plan=plan,
         )
     return patchify_embed(images, patch, dim)
 
@@ -126,16 +144,20 @@ def spectrogram_denoise(
     use_kernels: bool = False,
     sharded: bool = False,
     mesh=None,
+    *,
+    plan=None,
 ):
     """[audio] stage: treat a (B, T, F) spectrogram as images in [0,255].
 
-    Forwards ``use_kernels``/``sharded`` to :func:`denoise_batch`.
+    Forwards ``plan=`` (or legacy ``use_kernels``/``sharded``) to
+    :func:`denoise_batch`.
     """
-    bg_cfg = bg_cfg or BGConfig(r=4, sigma_s=2.0, sigma_r=40.0)
+    if plan is None and bg_cfg is None:
+        bg_cfg = BGConfig(r=4, sigma_s=2.0, sigma_r=40.0)
     lo = jnp.min(spec)
     hi = jnp.max(spec)
     scaled = (spec - lo) / jnp.maximum(hi - lo, 1e-9) * 255.0
     den = denoise_batch(
-        scaled, bg_cfg, use_kernels=use_kernels, sharded=sharded, mesh=mesh
+        scaled, bg_cfg, use_kernels=use_kernels, sharded=sharded, mesh=mesh, plan=plan
     )
     return den / 255.0 * (hi - lo) + lo

@@ -115,7 +115,7 @@ from .common import (
     ti_col_onehots,
 )
 
-__all__ = ["bg_fused_kernel_call", "DEFAULT_BATCH_TILE"]
+__all__ = ["bg_fused_kernel_call", "bg_fused_impl", "DEFAULT_BATCH_TILE"]
 
 # Frames per grid step. Bounded so the per-step working set (one-hot
 # z-reductions + two raw-plane stripes per frame) stays well under VMEM for
@@ -410,10 +410,7 @@ def _stream_kernel(
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "interpret", "batch_tile", "stream_input")
-)
-def bg_fused_kernel_call(
+def bg_fused_impl(
     image: jnp.ndarray,
     cfg: BGConfig,
     interpret: bool | None = None,
@@ -446,6 +443,17 @@ def bg_fused_kernel_call(
     """
     if interpret is None:
         interpret = default_interpret()
+    if batch_tile is not None and (
+        isinstance(batch_tile, bool)
+        or not isinstance(batch_tile, int)
+        or batch_tile < 1
+    ):
+        # reject here too (not only at BGPlan construction): a fractional or
+        # non-positive tile would otherwise surface as an opaque Pallas grid
+        # error deep inside the lowering
+        raise ValueError(
+            f"batch_tile must be a positive int or None, got {batch_tile!r}"
+        )
     temporal = carry is not None
     if temporal and stream_input:
         raise ValueError("stream_input does not compose with a temporal carry")
@@ -616,3 +624,12 @@ def bg_fused_kernel_call(
         )(img_p, msk_p, *consts)
     out = out[:b, :h]
     return out[0] if squeeze else out
+
+
+# The public jitted entry point. ``bg_fused_impl`` stays importable unjitted
+# so the plan layer (repro.plan) can trace it inside its own single
+# compiled executable — a nested pjit call costs ~10% extra dispatch time
+# per micro-batch in interpret mode, measured at the video-gate shape.
+bg_fused_kernel_call = functools.partial(
+    jax.jit, static_argnames=("cfg", "interpret", "batch_tile", "stream_input")
+)(bg_fused_impl)

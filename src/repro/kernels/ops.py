@@ -1,23 +1,21 @@
-"""Public jit'd entry points for the bilateral-grid Pallas kernels.
+"""Public entry points for the bilateral-grid Pallas kernels.
 
 `bilateral_grid_filter_pallas` is the production path: it chains the staged
 kernels (or the fused macro-pipeline kernel) and applies the paper's output
 quantization. Every op auto-selects interpret mode off-TPU.
 
-Batched throughput path: all entry points accept a single (h, w) frame or a
-(b, h, w) batch. The fused kernel consumes the batch natively through its
-2-D (batch, stripe) grid — one dispatch, shared constants, grid in VMEM —
-while the staged kernels fall back to `vmap` over frames (they round-trip
-the grid through HBM anyway, so there is nothing to share).
+Dispatch now lives in the plan layer (``repro.plan``): this function routes
+its kwargs into a :class:`repro.plan.BGPlan` (or takes one via ``plan=``) and
+executes the plan's cached compiled callable. Batched throughput path: all
+entry points accept a single (h, w) frame or a (b, h, w) batch. The fused
+kernel consumes the batch natively through its 2-D (batch, stripe) grid —
+one dispatch, shared constants, grid in VMEM — while the staged kernels fall
+back to `vmap` over frames (they round-trip the grid through HBM anyway, so
+there is nothing to share).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.bilateral_grid import BGConfig, grid_normalize, quantize_intensity
+from repro.core.bilateral_grid import BGConfig
 
 from .bg_blur import bg_blur_kernel_call
 from .bg_create import bg_create_kernel_call
@@ -39,58 +37,48 @@ bg_fused = bg_fused_kernel_call
 
 
 def _staged_single(image, cfg, interpret):
+    from repro.core.bilateral_grid import grid_normalize
+
     grid = bg_create_kernel_call(image, cfg, interpret=interpret)
     blurred = bg_blur_kernel_call(grid, cfg, interpret=interpret)
     grid_f = grid_normalize(blurred)
     return bg_slice_kernel_call(grid_f, image, cfg, interpret=interpret)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "cfg",
-        "fused",
-        "quantize_output",
-        "interpret",
-        "batch_tile",
-        "stream_input",
-    ),
-)
 def bilateral_grid_filter_pallas(
-    image: jnp.ndarray,
-    cfg: BGConfig,
+    image,
+    cfg: BGConfig | None = None,
     fused: bool = True,
     quantize_output: bool = True,
     interpret: bool | None = None,
     batch_tile: int | None = None,
     stream_input: bool = False,
-) -> jnp.ndarray:
+    *,
+    plan=None,
+):
     """Kernel-backed BG pipeline (paper normalization), single frame or batch.
 
-    fused=True runs the single macro-pipeline kernel (one HBM read/write;
-    batches share one dispatch via the (batch, stripe) grid); fused=False
-    chains the three staged kernels (grid round-trips through HBM — the
-    unfused baseline used for perf comparison), vmapped over any batch axis.
-    ``batch_tile`` and ``stream_input`` (explicit double-buffered HBM->VMEM
-    input DMA) are forwarded to the fused kernel.
+    Preferred form: ``bilateral_grid_filter_pallas(image, plan=plan)`` with a
+    :class:`repro.plan.BGPlan`. The kwarg form still works — ``fused=True``
+    maps to the fused macro-pipeline backend (one HBM read/write; batches
+    share one dispatch via the (batch, stripe) grid), ``fused=False`` to the
+    three staged kernels (grid round-trips through HBM — the unfused
+    baseline), ``stream_input=True`` to the explicit double-buffered
+    HBM->VMEM input DMA — and routes into an equivalent plan.
     """
-    if cfg.normalize_mode != "paper":
-        raise ValueError("pallas path implements the paper normalization mode")
-    if image.ndim not in (2, 3):
-        raise ValueError(f"expected (h, w) or (b, h, w), got {image.shape}")
-    image = image.astype(jnp.float32)
-    if fused:
-        out = bg_fused_kernel_call(
-            image,
-            cfg,
-            interpret=interpret,
+    from repro.plan import BGPlan, warn_legacy_dispatch
+
+    if plan is None:
+        if cfg is None:
+            raise TypeError("bilateral_grid_filter_pallas needs cfg= or plan=")
+        if not fused or stream_input or batch_tile is not None:
+            warn_legacy_dispatch("bilateral_grid_filter_pallas")
+        backend = ("fused_streamed" if stream_input else "fused") if fused else "staged"
+        plan = BGPlan(
+            cfg=cfg,
+            backend=backend,
             batch_tile=batch_tile,
-            stream_input=stream_input,
+            quantize_output=quantize_output,
+            interpret=interpret,
         )
-    elif image.ndim == 3:
-        out = jax.vmap(lambda im: _staged_single(im, cfg, interpret))(image)
-    else:
-        out = _staged_single(image, cfg, interpret)
-    if quantize_output:
-        out = quantize_intensity(out, cfg)
-    return out
+    return plan(image)

@@ -20,16 +20,21 @@ def serve_frames(args) -> None:
     import jax
 
     from repro.core import BGConfig, add_gaussian_noise, synthetic_batch
+    from repro.plan import plan_for
     from repro.serving import FrameDenoiseEngine, FrameRequest
 
     h, w = (int(x) for x in args.frame_hw.split("x"))
     cfg = BGConfig(r=6, sigma_s=4.0, sigma_r=60.0)
-    eng = FrameDenoiseEngine(
-        cfg, max_batch=args.micro_batch, stream_input=args.stream_input
+    # the plan layer auto-tunes batch_tile (VMEM-budget model) and
+    # stream_input (forced on by --stream-input, else geometry-selected)
+    plan = plan_for(
+        cfg, h, w, stream_input=True if args.stream_input else None
     )
+    eng = FrameDenoiseEngine(plan=plan, max_batch=args.micro_batch)
     print(
         f"[serve] frame engine: {jax.device_count()} device(s), "
-        f"micro-batch {eng.max_batch} (mesh-divisible by {eng.n_devices})"
+        f"micro-batch {eng.max_batch} (mesh-divisible by {eng.n_devices}), "
+        f"plan backend={plan.backend} batch_tile={plan.batch_tile}"
     )
     clean = synthetic_batch(args.frames, h, w, seed=0)
     noisy = add_gaussian_noise(clean, 30.0, seed=1)
@@ -72,6 +77,7 @@ def serve_video(args) -> None:
 
     from repro.core import BGConfig, add_gaussian_noise
     from repro.data import synthetic_video
+    from repro.plan import plan_for
     from repro.serving import AsyncFrameEngine
     from repro.video import MultiStreamPacker
 
@@ -91,20 +97,29 @@ def serve_video(args) -> None:
              for t in range(n_frames)]
         )
 
+    # One plan for the whole service: plan_for auto-tunes the fused-kernel
+    # batch tile from the pack geometry (whole pack in one macro-pipeline
+    # sweep while it fits the VMEM-budget model) — nothing threads
+    # batch_tile= by hand anymore; the packer asks the plan for its tile.
+    # Always temporal-capable: the packer serves whatever warm/cold mix the
+    # streams produce, so the plan must never be the input-streamed backend
+    # (which cannot carry the grid EMA; the packer rejects it).
+    plan = plan_for(cfg, h, w, n_frames=n_streams, temporal=True)
+    print(f"[serve] plan: backend={plan.backend} batch_tile={plan.batch_tile} "
+          f"mesh={plan.mesh_size} device(s)")
+
     # warm-up compile on the steady-state pack shape through a throwaway
     # engine: the jit caches are global, but the serving engine's telemetry
     # (p99 must not report compile time) and the temporal stream state
     # (frame 0 must enter each EMA exactly once) start clean.
-    warm_packer = MultiStreamPacker(cfg, batch_tile=n_streams)
+    warm_packer = MultiStreamPacker(plan=plan)
     for s in range(n_streams):
         warm_packer.open(s, alpha=args.alpha)
     with AsyncFrameEngine(cfg, max_batch=n_streams, packer=warm_packer) as warm:
         for f in [warm.submit(traffic[s][0], stream_id=s) for s in range(n_streams)]:
             f.result()
 
-    # batch_tile=n_streams: the whole pack rides one macro-pipeline sweep of
-    # the fused temporal kernel (per-step working set stays O(n*r*w))
-    packer = MultiStreamPacker(cfg, batch_tile=n_streams)
+    packer = MultiStreamPacker(plan=plan)
     for s in range(n_streams):
         packer.open(s, alpha=args.alpha)
     eng = AsyncFrameEngine(
@@ -135,9 +150,9 @@ def serve_video(args) -> None:
     print(
         f"[serve] {total} frames in {dt:.2f}s ({total / dt:.1f} frames/s, "
         f"{total / dt / n_streams:.1f} fps/stream)  "
-        f"p50={st['latency_ms_p50']:.1f}ms p99={st['latency_ms_p99']:.1f}ms  "
-        f"dispatches={st['dispatches']} mean_batch={st['mean_batch']:.1f}  "
-        f"deadline_misses={st['deadline_misses']}"
+        f"p50={st.latency_ms_p50:.1f}ms p99={st.latency_ms_p99:.1f}ms  "
+        f"dispatches={st.dispatches} mean_batch={st.mean_batch:.1f}  "
+        f"deadline_misses={st.deadline_misses}"
     )
 
 

@@ -1,0 +1,691 @@
+"""Compiled execution plans for the bilateral-grid pipelines (``BGPlan``).
+
+The paper's datapath is *configured once, then streamed*: window radius and
+grid geometry fix the FPGA pipeline structure, and frames flow through it at
+line rate with no further decisions. The software equivalent had drifted into
+per-call kwarg threading — ``use_kernels`` / ``sharded`` / ``mesh`` /
+``stream_input`` / ``batch_tile`` / ``interpret`` / temporal carry+alpha —
+re-decided independently by every layer (kernels, data pipeline, both frame
+engines, the video packer, the sharded service path, the launcher). This
+module collapses all of that into one plan/compile/execute layer:
+
+  * :class:`BGPlan` — a frozen, hashable record of **every** dispatch
+    decision. Invalid combinations (a temporal carry on the manual-DMA input
+    path, a non-"paper" normalization on a kernel backend, a fractional
+    ``batch_tile``) are rejected here, once, with a clear error — not deep
+    inside a Pallas grid lowering.
+  * :func:`plan_for` — heuristics that build a concrete plan from frame
+    geometry: ``batch_tile`` and ``stream_input`` are auto-selected from the
+    documented VMEM-budget model below.
+  * a per-plan compiled-executable cache — every caller of the same plan
+    reuses **one** jitted callable (including the shard_map wrapper for
+    mesh plans), instead of each layer maintaining its own jit/LRU.
+
+Dispatch-decision table
+-----------------------
+``BGPlan.backend`` names the compute route; ``temporal`` / ``mesh`` compose
+with it:
+
+  backend            route                                       composes with
+  ----------------   -----------------------------------------   -------------
+  "reference"        vmapped jnp GC->GF->TI (core.bilateral_     temporal
+                     grid); the numerical oracle                 (staged EMA)
+  "streaming"        lax.scan stripe pipeline (core.streaming,   mesh
+                     the paper's Fig. 4 dataflow in jnp)
+  "staged"           three staged Pallas kernels, grid through   --
+                     HBM between stages (unfused perf baseline)
+  "fused"            single GC||GF||TI macro-pipeline Pallas     temporal
+                     kernel, grid resident in VMEM               (in-kernel
+                                                                 EMA), mesh
+  "fused_streamed"   fused kernel + explicit double-buffered     mesh
+                     HBM->VMEM input DMA (manual two-slot
+                     prefetch instead of automatic pipelining)
+
+``mesh`` (a 1-D device mesh) shards the frame/stream batch axis via
+``shard_map`` — pure data parallelism, zero collectives (see
+``repro.sharding.bg_shard``). ``temporal`` switches the executable to the
+``(frames, carry, alpha) -> (out, new_carry)`` video form.
+
+The VMEM-budget model (the ``batch_tile`` / ``stream_input`` auto-tuner)
+------------------------------------------------------------------------
+The fused kernel's per-grid-step working set scales linearly with the batch
+tile ``bt`` (frames advanced per macro-pipeline step). Per frame, in f32
+elements (see the tensors in ``kernels.bg_fused._pipeline_step``):
+
+  inputs+outputs   6*r*w   default path (2 img + 2 msk + 2 out auto-pipelined
+                           blocks), or 4*r*w streamed (2 DMA slots + 2 out —
+                           the mask is synthesized in-kernel, never streamed)
+  scratch          7*gz*gy + 2*r*w   (three raw planes + blurred plane +
+                                     two r-line buffers)
+  temporaries      5*r*gz*w   (the GC one-hot z-stack and the TI z one-hots
+                              dominate; r*gz is bounded by construction —
+                              see kernels.common)
+
+The auto-tuner picks the largest ``bt`` whose step footprint fits
+``VMEM_STEP_BUDGET_BYTES`` (half of a 16 MiB VMEM — headroom for compiler
+temporaries), capped at ``MAX_AUTO_TILE`` and at the per-device share
+``ceil(n_frames / mesh_size)`` when the pack size is known. This replaces the
+hand-tuned ``DEFAULT_BATCH_TILE`` and the serve-time ``batch_tile=n_streams``
+threading: a 64-stream 60x96 video pack auto-tiles to the whole pack (one
+macro-pipeline sweep), a full-HD batch auto-tiles down to a few frames.
+
+``stream_input`` flips on when the *default path's doubled input blocks*
+(2 img + 2 msk = 16*r*w bytes per frame-step) exceed
+``STREAM_INPUT_THRESHOLD_BYTES``: at paper-scale full-HD radii (r >= 12,
+w = 1920) the auto-pipelined input footprint passes 256 KiB per frame and
+the plan switches to the manual two-slot DMA path, which halves input HBM
+bytes and needs no mask block (the "full-HD blows the auto-pipelining
+budget" rule from the PR-2 notes, now code). The temporal path never
+streams input (the carry operand claims the manual-DMA slot budget), which
+:class:`BGPlan` enforces at construction.
+
+Legacy kwargs (``use_kernels=``, ``sharded=``, ``stream_input=``, ...) on the
+public entry points still work: each entry point routes them into an
+equivalent ``BGPlan`` (batch_tile ``None`` = the kernel's ``DEFAULT_BATCH_TILE``,
+so legacy routes stay bit-identical) and warns once per call site.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilateral_grid import (
+    BGConfig,
+    bilateral_grid_filter,
+    grid_normalize,
+    grid_shape,
+    grid_slice,
+    quantize_intensity,
+)
+
+__all__ = [
+    "BGPlan",
+    "plan_for",
+    "auto_batch_tile",
+    "auto_stream_input",
+    "step_bytes_per_frame",
+    "VMEM_STEP_BUDGET_BYTES",
+    "STREAM_INPUT_THRESHOLD_BYTES",
+    "MAX_AUTO_TILE",
+]
+
+BACKENDS = ("reference", "streaming", "staged", "fused", "fused_streamed")
+_KERNEL_BACKENDS = ("staged", "fused", "fused_streamed")
+_FUSED_BACKENDS = ("fused", "fused_streamed")
+_MESH_BACKENDS = ("streaming", "fused", "fused_streamed")
+_TEMPORAL_BACKENDS = ("reference", "fused")
+
+# The auto-tuner's budget model (documented in the module docstring): keep
+# the fused kernel's per-step working set within half a 16 MiB VMEM, switch
+# to the manual-DMA input path when the doubled auto-pipelined input blocks
+# alone pass 256 KiB per frame-step, and never tile past MAX_AUTO_TILE
+# (per-step latency stops amortizing anything beyond that).
+VMEM_STEP_BUDGET_BYTES = 8 * 2**20
+STREAM_INPUT_THRESHOLD_BYTES = 256 * 2**10
+MAX_AUTO_TILE = 64
+
+
+# ---------------------------------------------------------------- heuristics
+def step_bytes_per_frame(
+    cfg: BGConfig, h: int, w: int, *, stream_input: bool = False
+) -> int:
+    """Fused-kernel per-grid-step VMEM bytes for ONE frame of the batch tile.
+
+    The linear-in-``bt`` part of the step footprint (io blocks + scratch +
+    dominant temporaries); constants (column one-hots, taps) are tile-
+    independent and excluded. See the module docstring for the term-by-term
+    derivation.
+    """
+    r = cfg.r
+    _, gy, gz = grid_shape(h, w, cfg)
+    io = (4 if stream_input else 6) * r * w
+    scratch = 7 * gz * gy + 2 * r * w
+    temporaries = 5 * r * gz * w
+    return 4 * (io + scratch + temporaries)
+
+
+def auto_stream_input(cfg: BGConfig, h: int, w: int) -> bool:
+    """True when the default path's doubled input blocks (2 img + 2 msk =
+    16*r*w bytes per frame-step) exceed the auto-pipelining threshold."""
+    return 16 * cfg.r * w > STREAM_INPUT_THRESHOLD_BYTES
+
+
+def auto_batch_tile(
+    cfg: BGConfig,
+    h: int,
+    w: int,
+    n_frames: Optional[int] = None,
+    *,
+    stream_input: bool = False,
+    mesh_size: int = 1,
+) -> int:
+    """Largest batch tile whose per-step working set fits the VMEM budget.
+
+    Capped at ``MAX_AUTO_TILE`` and, when the pack size is known, at the
+    per-device share ``ceil(n_frames / mesh_size)`` (a larger tile would be
+    pure padding on every device).
+    """
+    per = step_bytes_per_frame(cfg, h, w, stream_input=stream_input)
+    bt = max(1, VMEM_STEP_BUDGET_BYTES // per)
+    bt = min(bt, MAX_AUTO_TILE)
+    if n_frames is not None:
+        bt = min(bt, -(-int(n_frames) // max(1, mesh_size)))
+    return int(max(1, bt))
+
+
+# -------------------------------------------------------------------- BGPlan
+@dataclasses.dataclass(frozen=True)
+class BGPlan:
+    """One frozen, hashable record of every bilateral-grid dispatch decision.
+
+    Fields:
+      cfg:             the grid/window configuration (frozen ``BGConfig``).
+      backend:         compute route — see the module-docstring table.
+      temporal:        the executable takes ``(frames, carry, alpha)`` and
+                       returns ``(out, new_carry)`` (video grid-EMA). Only
+                       ``"fused"`` (in-kernel EMA) and ``"reference"`` (the
+                       staged jnp oracle) support it.
+      batch_tile:      frames per fused-kernel grid step. ``None`` defers to
+                       the kernel's ``DEFAULT_BATCH_TILE`` (what every legacy
+                       kwarg route did); :func:`plan_for` fills in a concrete
+                       auto-tuned value. Ignored (normalized to ``None``) by
+                       non-fused backends.
+      mesh:            1-D device mesh sharding the frame/stream batch axis,
+                       or ``None`` for single-device dispatch. Size-1 meshes
+                       normalize to ``None``.
+      quantize_output: apply the paper's output rounding at the exit.
+      interpret:       Pallas interpret-mode override (``None`` = auto:
+                       interpret everywhere except real TPUs).
+
+    Equal plans (``==``/``hash``) share one compiled executable via
+    :meth:`executable`; calling the plan dispatches through it.
+    """
+
+    cfg: BGConfig
+    backend: str = "fused"
+    temporal: bool = False
+    batch_tile: Optional[int] = None
+    mesh: Optional[jax.sharding.Mesh] = None
+    quantize_output: bool = True
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
+        bt = self.batch_tile
+        if bt is not None:
+            if isinstance(bt, bool) or not isinstance(bt, int):
+                raise ValueError(
+                    f"batch_tile must be a positive int or None, got "
+                    f"{bt!r} ({type(bt).__name__}) — a fractional tile "
+                    f"surfaces as an opaque Pallas grid error"
+                )
+            if bt < 1:
+                raise ValueError(f"batch_tile must be >= 1, got {bt}")
+            if self.backend not in _FUSED_BACKENDS:
+                # the staged oracle / reference paths have no tiling concept;
+                # normalize so plan equality doesn't split their exec cache
+                object.__setattr__(self, "batch_tile", None)
+        if self.backend in _KERNEL_BACKENDS and self.cfg.normalize_mode != "paper":
+            raise ValueError(
+                "kernel backends implement the paper normalization mode "
+                f"(got normalize_mode={self.cfg.normalize_mode!r})"
+            )
+        if self.temporal:
+            if self.backend == "fused_streamed":
+                raise ValueError(
+                    "stream_input does not compose with a temporal carry "
+                    "(the carry operand owns the manual-DMA slot budget); "
+                    "use backend='fused'"
+                )
+            if self.backend not in _TEMPORAL_BACKENDS:
+                raise ValueError(
+                    f"temporal plans support backends {_TEMPORAL_BACKENDS}, "
+                    f"got {self.backend!r}"
+                )
+        if self.mesh is not None:
+            if len(self.mesh.axis_names) != 1:
+                raise ValueError(
+                    f"BGPlan meshes are 1-D batch meshes, got axes "
+                    f"{self.mesh.axis_names!r}"
+                )
+            if int(self.mesh.devices.size) == 1:
+                object.__setattr__(self, "mesh", None)  # degrade to plain
+            elif self.backend not in _MESH_BACKENDS:
+                raise ValueError(
+                    f"backend {self.backend!r} does not shard over a mesh; "
+                    f"mesh plans need one of {_MESH_BACKENDS}"
+                )
+
+    # ------------------------------------------------------------ utilities
+    @property
+    def mesh_size(self) -> int:
+        return 1 if self.mesh is None else int(self.mesh.devices.size)
+
+    def tile_for(self, n_frames: int) -> int:
+        """Effective fused-kernel tile for an ``n_frames`` pack: the plan's
+        own tile (``plan_for``'s auto-tuned value, or the kernel's
+        ``DEFAULT_BATCH_TILE`` when the plan defers) clamped to the
+        per-device shard, exactly as the kernel clamps it. This is what the
+        video packer asks per pack instead of being handed ``batch_tile=``
+        — pinning the clamp in the plan keeps the dispatch geometry (and
+        therefore the temporal-carry bits) an explicit plan decision."""
+        from repro.kernels.bg_fused import DEFAULT_BATCH_TILE
+
+        shard = -(-int(n_frames) // self.mesh_size)
+        tile = DEFAULT_BATCH_TILE if self.batch_tile is None else self.batch_tile
+        return max(1, min(tile, shard))
+
+    def with_tile(self, batch_tile: int) -> "BGPlan":
+        """This plan with ``batch_tile`` pinned (cached — per-pack hot path)."""
+        if batch_tile == self.batch_tile:
+            return self
+        return _tiled_variant(self, batch_tile)
+
+    def with_options(self, **changes) -> "BGPlan":
+        """``dataclasses.replace`` with plan validation re-run."""
+        return dataclasses.replace(self, **changes)
+
+    def as_temporal(self, temporal: bool = True) -> "BGPlan":
+        """The temporal / per-frame variant of this plan (cached — the video
+        packer derives one per pack, on the dispatch hot path)."""
+        if self.temporal == temporal:
+            return self
+        return _temporal_variant(self, temporal)
+
+    # ------------------------------------------------------------- dispatch
+    def executable(self):
+        """The plan's compiled callable (one per equal plan, cached).
+
+        Non-temporal: ``fn(frames) -> out``. Temporal:
+        ``fn(frames, carry, alpha) -> (out, new_carry)``. The instance memo
+        skips the (hash-based) global cache lookup on the dispatch hot path;
+        equal plans still resolve to the same callable through
+        ``_plan_executable``.
+        """
+        fn = self.__dict__.get("_exec_memo")
+        if fn is None:
+            fn = _plan_executable(self)
+            object.__setattr__(self, "_exec_memo", fn)
+        return fn
+
+    def __call__(self, frames, carry=None, alpha=None):
+        frames = jnp.asarray(frames)
+        if self.temporal:
+            if carry is None or alpha is None:
+                raise ValueError(
+                    "temporal plan dispatch needs both carry= and alpha="
+                )
+            squeeze = frames.ndim == 2
+            if squeeze:
+                frames = frames[None]
+                carry = jnp.asarray(carry)[None]
+            if frames.ndim != 3:
+                raise ValueError(
+                    f"temporal plans take (h, w) or (n, h, w) frames, got "
+                    f"{frames.shape}"
+                )
+            n = frames.shape[0]
+            if not isinstance(alpha, jax.Array):
+                # host-side alpha: broadcast + range-check here, once (a
+                # device-resident alpha vector is trusted — checking it
+                # would force a sync on the dispatch hot path)
+                alpha_np = np.broadcast_to(
+                    np.asarray(alpha, np.float32), (n,)
+                )
+                if (alpha_np < 0.0).any() or (alpha_np >= 1.0).any():
+                    raise ValueError(
+                        f"temporal alpha must be in [0, 1), got {alpha}"
+                    )
+                alpha = jnp.asarray(alpha_np)
+            elif alpha.ndim == 0:
+                alpha = jnp.broadcast_to(alpha, (n,))
+            out, new_carry = self.executable()(frames, carry, alpha)
+            return (out[0], new_carry[0]) if squeeze else (out, new_carry)
+        if carry is not None or alpha is not None:
+            raise ValueError(
+                "carry/alpha require a temporal plan (BGPlan(temporal=True))"
+            )
+        if frames.ndim == 4:
+            # color (b, h, w, c): per-channel grids, channels folded into the
+            # batch axis (frames and channels are equally independent)
+            b, h, w, c = frames.shape
+            folded = jnp.moveaxis(frames, -1, 1).reshape(b * c, h, w)
+            out = self.executable()(folded)
+            return jnp.moveaxis(out.reshape(b, c, h, w), 1, -1)
+        if frames.ndim not in (2, 3):
+            raise ValueError(
+                f"expected (h, w), (b, h, w) or (b, h, w, c) frames, got "
+                f"{frames.shape}"
+            )
+        return self.executable()(frames)
+
+
+# ------------------------------------------------------------------ plan_for
+def plan_for(
+    cfg: BGConfig,
+    height: int,
+    width: int,
+    *,
+    n_frames: Optional[int] = None,
+    temporal: bool = False,
+    backend: Optional[str] = None,
+    sharded: Optional[bool] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    batch_tile: Optional[int] = None,
+    stream_input: Optional[bool] = None,
+    quantize_output: bool = True,
+    interpret: Optional[bool] = None,
+) -> BGPlan:
+    """Build a concrete :class:`BGPlan` for the given frame geometry.
+
+    ``batch_tile`` and ``stream_input`` default to the VMEM-budget auto-tuner
+    (module docstring); pass explicit values to pin them. ``sharded=None``
+    auto-meshes over all local devices when more than one is present *and*
+    the resolved backend shards (the single-host oracle backends —
+    ``reference``/``staged`` — simply stay single-device); ``sharded=False``
+    forces single-device, ``True`` requires a mesh-capable backend and
+    builds the mesh; explicit ``mesh`` wins. ``temporal=True`` returns the
+    video-form plan (fused in-kernel grid-EMA; never input-streamed).
+    """
+    if backend is None:
+        if temporal:
+            if stream_input:
+                raise ValueError(
+                    "stream_input does not compose with a temporal carry"
+                )
+            backend = "fused"
+        else:
+            stream = (
+                auto_stream_input(cfg, height, width)
+                if stream_input is None
+                else bool(stream_input)
+            )
+            backend = "fused_streamed" if stream else "fused"
+    elif stream_input is not None and (backend == "fused_streamed") != bool(
+        stream_input
+    ) and backend in _FUSED_BACKENDS:
+        raise ValueError(
+            f"stream_input={stream_input} contradicts backend={backend!r}"
+        )
+
+    mesh_capable = backend in _MESH_BACKENDS
+    if sharded and not mesh_capable:
+        raise ValueError(
+            f"sharded=True needs a mesh-capable backend {_MESH_BACKENDS}, "
+            f"got {backend!r}"
+        )
+    if sharded is False:
+        mesh = None
+    elif mesh is None and mesh_capable and jax.device_count() > 1:
+        # auto-mesh only for backends that shard; an *explicit* mesh on an
+        # oracle backend falls through to BGPlan's construction error
+        from repro.sharding.bg_shard import batch_mesh
+
+        mesh = batch_mesh()
+    if mesh is not None and int(mesh.devices.size) == 1:
+        mesh = None
+    mesh_size = 1 if mesh is None else int(mesh.devices.size)
+
+    if batch_tile is None:
+        if backend in _FUSED_BACKENDS:
+            batch_tile = auto_batch_tile(
+                cfg,
+                height,
+                width,
+                n_frames,
+                stream_input=backend == "fused_streamed",
+                mesh_size=mesh_size,
+            )
+    elif mesh_size > 1 and n_frames is not None:
+        shard = -(-int(n_frames) // mesh_size)
+        if batch_tile > shard:
+            raise ValueError(
+                f"batch_tile={batch_tile} exceeds the {shard} frame(s) each "
+                f"of the {mesh_size} mesh devices receives for "
+                f"n_frames={n_frames}; the kernel would silently clamp the "
+                f"tile (shifting the temporal-carry dispatch geometry) — "
+                f"use batch_tile<={shard} or batch_tile=None (auto)"
+            )
+
+    return BGPlan(
+        cfg=cfg,
+        backend=backend,
+        temporal=temporal,
+        batch_tile=batch_tile,
+        mesh=mesh,
+        quantize_output=quantize_output,
+        interpret=interpret,
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def _temporal_variant(plan: BGPlan, temporal: bool) -> BGPlan:
+    return dataclasses.replace(plan, temporal=temporal)
+
+
+@functools.lru_cache(maxsize=256)
+def _tiled_variant(plan: BGPlan, batch_tile: int) -> BGPlan:
+    return dataclasses.replace(plan, batch_tile=batch_tile)
+
+
+# ------------------------------------------------------- legacy kwarg shims
+_WARNED_SITES: set = set()
+
+
+def warn_legacy_dispatch(site: str) -> None:
+    """One DeprecationWarning per call site for legacy dispatch kwargs."""
+    if site in _WARNED_SITES:
+        return
+    _WARNED_SITES.add(site)
+    warnings.warn(
+        f"{site}: per-call dispatch kwargs (use_kernels/sharded/mesh/"
+        f"stream_input/batch_tile/interpret/staged) are deprecated; build a "
+        f"repro.plan.BGPlan (e.g. via plan_for) and pass plan=",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def _mesh_call(inner, mesh, n_in: int, n_out: int):
+    """The shared mesh composition: zero-pad every input's leading axis to a
+    device multiple, shard_map ``inner`` with plain batch-axis specs
+    (``check_rep=False`` — pallas_call has no replication rule), and trim
+    every output back to the original leading size. Returns
+    ``fn(*arrays) -> output`` (tuple for ``n_out > 1``)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.bg_shard import _pad_rows, _row_pad
+    from repro.sharding.compat import shard_map
+
+    nd = int(mesh.devices.size)
+    spec = P(mesh.axis_names[0])
+    sharded = shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=spec if n_in == 1 else (spec,) * n_in,
+        out_specs=spec if n_out == 1 else (spec,) * n_out,
+        check_rep=False,
+    )
+
+    def call(*arrays):
+        n = arrays[0].shape[0]
+        pad = _row_pad(nd, n)
+        out = sharded(*(_pad_rows(a, pad) for a in arrays))
+        if n_out == 1:
+            return out[:n]
+        return tuple(o[:n] for o in out)
+
+    return call
+
+
+# -------------------------------------------------- compiled-executable cache
+@functools.lru_cache(maxsize=256)
+def _plan_executable(plan: BGPlan):
+    """ONE jitted callable per plan (the compiled-executable cache).
+
+    The callable owns the complete dispatch: dtype normalization, ragged-
+    batch padding, the shard_map wrapper for mesh plans, the kernel/scan/
+    reference compute, padding trim, and output quantization — so repeat
+    dispatches of a plan hit one compiled executable regardless of which
+    layer (pipeline, engine, packer, launcher) issued them. Compositions
+    mirror the pre-plan routes operation-for-operation, which is what keeps
+    legacy shims bit-identical.
+    """
+    cfg = plan.cfg
+    quant = plan.quantize_output
+    interpret = plan.interpret
+    batch_tile = plan.batch_tile
+    mesh = plan.mesh
+
+    def _maybe_quantize(out):
+        return quantize_intensity(out, cfg) if quant else out
+
+    # ------------------------------------------------------------- temporal
+    if plan.temporal:
+        if plan.backend == "reference":
+            # the staged jnp oracle: grid visible between GF and TI
+            from repro.video.temporal import blurred_grid_batch
+
+            def fn(frames, carry, alpha):
+                frames = frames.astype(jnp.float32)
+                blurred = blurred_grid_batch(frames, cfg)
+                a = alpha.astype(jnp.float32).reshape((-1, 1, 1, 1, 1))
+                new_carry = (1.0 - a) * blurred + a * carry
+                grid_f = grid_normalize(new_carry)
+                out = jax.vmap(lambda gf, f: grid_slice(gf, f, cfg))(
+                    grid_f, frames
+                )
+                return _maybe_quantize(out), new_carry
+
+            return jax.jit(fn)
+
+        # the unjitted impl: traced directly into this plan's one executable
+        # (a nested pjit costs ~10% dispatch time in interpret mode)
+        from repro.kernels.bg_fused import bg_fused_impl
+
+        def inner_temporal(frames, carry, alpha):
+            return bg_fused_impl(
+                frames,
+                cfg,
+                interpret=interpret,
+                batch_tile=batch_tile,
+                carry=carry,
+                alpha=alpha,
+            )
+
+        if mesh is None:
+
+            def fn(frames, carry, alpha):
+                out, new_carry = inner_temporal(
+                    frames.astype(jnp.float32), carry, alpha
+                )
+                return _maybe_quantize(out), new_carry
+
+            return jax.jit(fn)
+
+        meshed = _mesh_call(inner_temporal, mesh, n_in=3, n_out=2)
+
+        def fn(frames, carry, alpha):
+            out, new_carry = meshed(frames.astype(jnp.float32), carry, alpha)
+            return _maybe_quantize(out), new_carry
+
+        return jax.jit(fn)
+
+    # --------------------------------------------------------- non-temporal
+    if plan.backend == "reference":
+
+        def fn(frames):
+            single = lambda im: bilateral_grid_filter(
+                im, cfg, quantize_output=quant
+            )
+            if frames.ndim == 3:
+                return jax.vmap(single)(frames)
+            return single(frames)
+
+        return jax.jit(fn)
+
+    if plan.backend == "streaming":
+        from repro.core.streaming import _streaming_single
+
+        single = functools.partial(
+            _streaming_single, cfg=cfg, quantize_output=quant
+        )
+
+        if mesh is None:
+
+            def fn(frames):
+                if frames.ndim == 3:
+                    return jax.vmap(single)(frames)
+                return single(frames)
+
+            return jax.jit(fn)
+
+        meshed = _mesh_call(
+            lambda x: jax.vmap(single)(x), mesh, n_in=1, n_out=1
+        )
+
+        def fn(frames):
+            if frames.ndim == 2:  # single frame: plain scan, no shard_map
+                return single(frames)
+            return meshed(frames)
+
+        return jax.jit(fn)
+
+    if plan.backend == "staged":
+        from repro.kernels.ops import _staged_single
+
+        def fn(frames):
+            frames = frames.astype(jnp.float32)
+            if frames.ndim == 3:
+                out = jax.vmap(
+                    lambda im: _staged_single(im, cfg, interpret)
+                )(frames)
+            else:
+                out = _staged_single(frames, cfg, interpret)
+            return _maybe_quantize(out)
+
+        return jax.jit(fn)
+
+    # fused / fused_streamed — the unjitted impl, traced into one executable
+    from repro.kernels.bg_fused import bg_fused_impl
+
+    inner = functools.partial(
+        bg_fused_impl,
+        cfg=cfg,
+        interpret=interpret,
+        batch_tile=batch_tile,
+        stream_input=plan.backend == "fused_streamed",
+    )
+
+    if mesh is None:
+
+        def fn(frames):
+            return _maybe_quantize(inner(frames.astype(jnp.float32)))
+
+        return jax.jit(fn)
+
+    meshed = _mesh_call(inner, mesh, n_in=1, n_out=1)
+
+    def fn(frames):
+        frames = frames.astype(jnp.float32)
+        squeeze = frames.ndim == 2
+        if squeeze:
+            frames = frames[None]
+        out = _maybe_quantize(meshed(frames))
+        return out[0] if squeeze else out
+
+    return jax.jit(fn)
+
+
+def executable_cache_info():
+    """Cache statistics of the per-plan compiled-executable cache."""
+    return _plan_executable.cache_info()

@@ -17,7 +17,7 @@ Frame serving comes in two flavors; pick by how the caller wants to wait:
     ``repro.video`` packer, and strictly higher sustained frames/sec than
     the synchronous engine (gated in benchmarks/bench_video_stream.py).
 """
-from .async_engine import AsyncFrameEngine, AsyncFrameRequest
+from .async_engine import AsyncFrameEngine, AsyncFrameRequest, EngineStats
 from .engine import Request, ServeEngine, make_prefill, make_serve_step
 from .frames import FrameDenoiseEngine, FrameRequest
 from .sampling import greedy, sample_temperature, sample_topk

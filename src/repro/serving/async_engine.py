@@ -37,8 +37,15 @@ one micro-batch and the pack's stream axis shards over the local mesh. The
 per-stream grid carries chain through JAX's async dataflow, so back-to-back
 packs still overlap.
 
-Telemetry (``stats()``): queue/in-flight depth, dispatch count, mean batch
-size, p50/p99 request latency, deadline misses.
+Telemetry: ``stats()`` returns a structured :class:`EngineStats` snapshot
+(queue/in-flight depth, dispatch count, mean batch size, p50/p99 request
+latency, deadline misses) consumed by ``benchmarks/bench_video_stream.py``
+and its ``BENCH_<ts>.json`` exporter; ``stats()["key"]`` indexing survives
+as a legacy shim.
+
+Dispatch is plan-driven: pass a ``repro.plan.BGPlan`` via ``plan=`` (or a
+packer whose plan carries the video dispatch); the legacy ``cfg``/``mesh``/
+``stream_input``/``interpret`` kwargs route into an equivalent plan.
 """
 from __future__ import annotations
 
@@ -55,11 +62,40 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bilateral_grid import BGConfig
-from repro.sharding.bg_shard import bg_denoise_sharded
 
-__all__ = ["AsyncFrameEngine", "AsyncFrameRequest"]
+__all__ = ["AsyncFrameEngine", "AsyncFrameRequest", "EngineStats"]
 
 _SENTINEL = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """End-of-interval engine telemetry snapshot (ROADMAP's "structured
+    metrics" item): counts are since engine start, depths are instantaneous,
+    latencies are over the last 4096 completed requests.
+
+    ``stats["key"]`` indexing is kept as a legacy shim for the former dict
+    form; prefer attribute access. ``as_dict()`` feeds exporters (the
+    ``BENCH_<ts>.json`` snapshot rows in benchmarks/bench_video_stream.py).
+    """
+
+    submitted: int
+    completed: int
+    dispatches: int
+    queue_depth: int
+    inflight_depth: int
+    deadline_misses: int
+    mean_batch: float
+    latency_ms_p50: float
+    latency_ms_p99: float
+
+    def __getitem__(self, key: str):
+        if key not in self.__dataclass_fields__:
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -80,7 +116,7 @@ class AsyncFrameEngine:
 
     def __init__(
         self,
-        cfg: BGConfig,
+        cfg: BGConfig | None = None,
         mesh=None,
         max_batch: int = 32,
         max_queue: int = 256,
@@ -90,6 +126,7 @@ class AsyncFrameEngine:
         stream_input: bool = False,
         interpret: Optional[bool] = None,
         packer=None,
+        plan=None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -97,17 +134,43 @@ class AsyncFrameEngine:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
-        if mesh is None and packer is None and jax.device_count() > 1:
-            from repro.sharding.bg_shard import batch_mesh
+        if packer is not None:
+            # video mode dispatches through the packer's own plan — a
+            # second, different plan would be silently ignored
+            if plan is not None and plan is not packer.plan:
+                raise ValueError(
+                    "pass either plan= or packer= (video mode dispatches "
+                    "the packer's plan); got two different plans"
+                )
+            plan = packer.plan
+        elif plan is None:
+            if cfg is None:
+                raise TypeError("AsyncFrameEngine needs cfg=, plan= or packer=")
+            from repro.plan import BGPlan, warn_legacy_dispatch
+            from repro.sharding.bg_shard import _service_mesh
 
-            mesh = batch_mesh()
-        self.cfg = cfg
-        self.mesh = mesh
+            if stream_input or mesh is not None:
+                warn_legacy_dispatch("AsyncFrameEngine")
+            plan = BGPlan(
+                cfg=cfg,
+                backend="fused_streamed" if stream_input else "fused",
+                mesh=_service_mesh(mesh),
+                quantize_output=True,
+                interpret=interpret,
+            )
+        elif not plan.quantize_output:
+            # same contract as FrameDenoiseEngine: the two serving fronts
+            # are gated output-identical (bench_video_stream.py), so they
+            # must reject the same plans
+            raise ValueError(
+                "AsyncFrameEngine serves quantized frames; build the plan "
+                "with quantize_output=True"
+            )
+        self.plan = plan
+        self.cfg = cfg if cfg is not None else self.plan.cfg
         self.max_batch = max_batch
         self.batch_window = batch_window_ms / 1e3
         self.deadline_margin = deadline_margin_ms / 1e3
-        self.stream_input = stream_input
-        self.interpret = interpret
         self.packer = packer
 
         self._queue: "queue.Queue" = queue.Queue(maxsize=max_queue)
@@ -214,24 +277,24 @@ class AsyncFrameEngine:
         self.close()
 
     # ----------------------------------------------------------- telemetry
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> EngineStats:
+        def _pct(lat, q):
+            return lat[min(int(q * len(lat)), len(lat) - 1)] * 1e3 if lat else 0.0
+
         with self._lock:
             lat = sorted(self._latencies)
             sizes = list(self._batch_sizes)
-            stats = {
-                "submitted": self._submitted,
-                "completed": self._completed,
-                "dispatches": self._dispatches,
-                "queue_depth": self._queue.qsize(),
-                "inflight_depth": self._inflight.qsize(),
-                "deadline_misses": self._deadline_misses,
-                "mean_batch": (sum(sizes) / len(sizes)) if sizes else 0.0,
-            }
-        for name, q in (("latency_ms_p50", 0.50), ("latency_ms_p99", 0.99)):
-            stats[name] = (
-                lat[min(int(q * len(lat)), len(lat) - 1)] * 1e3 if lat else 0.0
+            return EngineStats(
+                submitted=self._submitted,
+                completed=self._completed,
+                dispatches=self._dispatches,
+                queue_depth=self._queue.qsize(),
+                inflight_depth=self._inflight.qsize(),
+                deadline_misses=self._deadline_misses,
+                mean_batch=(sum(sizes) / len(sizes)) if sizes else 0.0,
+                latency_ms_p50=_pct(lat, 0.50),
+                latency_ms_p99=_pct(lat, 0.99),
             )
-        return stats
 
     # ------------------------------------------------------------ dispatch
     def _get_next(self, timeout: Optional[float]):
@@ -291,16 +354,9 @@ class AsyncFrameEngine:
             out = self.packer.pack(by_sid)
             return [out[r.stream_id] for r in batch]
         stacked = jnp.stack([jnp.asarray(r.frame, jnp.float32) for r in batch])
-        if self.mesh is None:
+        if self.plan.mesh is None:
             stacked = jax.device_put(stacked)  # overlap transfer with compute
-        out = bg_denoise_sharded(
-            stacked,
-            self.cfg,
-            mesh=self.mesh,
-            stream_input=self.stream_input,
-            interpret=self.interpret,
-            quantize_output=True,
-        )
+        out = self.plan(stacked)
         return [out[i] for i in range(len(batch))]
 
     def _dispatch_loop(self):

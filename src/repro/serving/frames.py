@@ -23,11 +23,9 @@ import dataclasses
 from collections import deque
 from typing import Deque, List, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.bilateral_grid import BGConfig
-from repro.sharding.bg_shard import batch_mesh, bg_denoise_sharded
 
 __all__ = ["FrameRequest", "FrameDenoiseEngine"]
 
@@ -52,23 +50,46 @@ class FrameDenoiseEngine:
 
     def __init__(
         self,
-        cfg: BGConfig,
+        cfg: BGConfig | None = None,
         mesh=None,
         max_batch: int = 32,
         stream_input: bool = False,
         interpret: Optional[bool] = None,
+        *,
+        plan=None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        if mesh is None and jax.device_count() > 1:
-            mesh = batch_mesh()
-        self.cfg = cfg
-        self.mesh = mesh
-        self.n_devices = 1 if mesh is None else int(mesh.devices.size)
+        if plan is None:
+            if cfg is None:
+                raise TypeError("FrameDenoiseEngine needs cfg= or plan=")
+            from repro.plan import BGPlan, warn_legacy_dispatch
+            from repro.sharding.bg_shard import _service_mesh
+
+            if stream_input or mesh is not None:
+                warn_legacy_dispatch("FrameDenoiseEngine")
+            plan = BGPlan(
+                cfg=cfg,
+                backend="fused_streamed" if stream_input else "fused",
+                mesh=_service_mesh(mesh),
+                quantize_output=True,
+                interpret=interpret,
+            )
+        elif not plan.quantize_output:
+            raise ValueError("FrameDenoiseEngine serves quantized frames; "
+                             "build the plan with quantize_output=True")
+        self.plan = plan
+        self.n_devices = plan.mesh_size
         self.max_batch = max(1, max_batch // self.n_devices) * self.n_devices
-        self.stream_input = stream_input
-        self.interpret = interpret
         self._queue: Deque[FrameRequest] = deque()
+
+    @property
+    def cfg(self) -> BGConfig:
+        return self.plan.cfg
+
+    @property
+    def mesh(self):
+        return self.plan.mesh
 
     # ------------------------------------------------------------ requests
     def submit(self, req: FrameRequest) -> None:
@@ -94,14 +115,7 @@ class FrameDenoiseEngine:
             return []
         reqs = [self._queue.popleft() for _ in range(k)]
         batch = jnp.stack([jnp.asarray(r.frame, jnp.float32) for r in reqs])
-        out = bg_denoise_sharded(
-            batch,
-            self.cfg,
-            mesh=self.mesh,
-            stream_input=self.stream_input,
-            interpret=self.interpret,
-            quantize_output=True,
-        )
+        out = self.plan(batch)
         for i, r in enumerate(reqs):
             r.result = out[i]
         return reqs

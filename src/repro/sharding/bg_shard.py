@@ -23,24 +23,23 @@ across frames, therefore:
 
 ``check_rep=False`` is required because ``pallas_call`` has no replication
 rule; it is safe here since no out spec claims replication.
+
+The pad -> shard_map -> trim -> quantize composition itself now lives in the
+plan layer (``repro.plan``): :func:`bg_denoise_sharded` and
+:func:`bg_temporal_sharded` are thin shims that route their kwargs into a
+mesh-carrying :class:`repro.plan.BGPlan`, so repeat dispatches hit the
+plan's per-(plan, mesh) compiled-executable cache instead of this module
+maintaining its own shard_map/jit LRUs.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.bilateral_grid import BGConfig, quantize_intensity
-from repro.kernels.bg_fused import bg_fused_kernel_call
+from repro.core.bilateral_grid import BGConfig
 
 from .compat import shard_map
-
-# jitted so the service exits pay one fused rounding kernel instead of three
-# eager elementwise dispatches over the full batch (the staged oracle
-# quantizes inside its own jit — without this the comparison is lopsided)
-_quantize = jax.jit(quantize_intensity, static_argnames=("cfg",))
 
 __all__ = [
     "BATCH_AXIS",
@@ -65,8 +64,8 @@ def batch_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
 def _service_mesh(mesh: jax.sharding.Mesh | None) -> jax.sharding.Mesh | None:
     """Shared mesh default for the service entry points: auto-mesh over all
     local devices when more than one is present; ``None`` (and size-1
-    meshes, checked by the callers) degrade to the plain single-device
-    call."""
+    meshes, normalized away by ``BGPlan``) degrade to the plain
+    single-device call."""
     if mesh is None and jax.device_count() > 1:
         return batch_mesh()
     return mesh
@@ -92,8 +91,8 @@ def shard_batch_call(fn, images: jnp.ndarray, mesh: jax.sharding.Mesh) -> jnp.nd
     every shard traces with the same static shard shape.
 
     The shard_map wrapper is rebuilt per call (``fn`` is arbitrary); on a
-    serving hot path prefer :func:`bg_denoise_sharded`, whose wrapper is
-    cached and jitted per (cfg, mesh, flags).
+    serving hot path prefer a mesh-carrying ``repro.plan.BGPlan``, whose
+    compiled executable is cached per plan.
     """
     axis = mesh.axis_names[0]
     b = images.shape[0]
@@ -104,45 +103,16 @@ def shard_batch_call(fn, images: jnp.ndarray, mesh: jax.sharding.Mesh) -> jnp.nd
     return sharded(padded)[:b]
 
 
-@functools.lru_cache(maxsize=64)
-def _sharded_fused_call(
-    cfg: BGConfig,
-    mesh: jax.sharding.Mesh,
-    interpret: bool | None,
-    batch_tile: int | None,
-    stream_input: bool,
-):
-    """Jitted shard_map of the fused kernel, cached per (cfg, mesh, flags).
-
-    The serving engine calls :func:`bg_denoise_sharded` once per micro-batch;
-    without this cache every dispatch would rebuild the shard_map wrapper
-    around a fresh ``functools.partial`` (new function identity) and re-trace
-    the sharded computation. Cached + jitted, repeat dispatches hit the
-    compiled executable directly, matching how the single-device fallback
-    hits ``bg_fused_kernel_call``'s own jit cache.
-    """
-    fn = functools.partial(
-        bg_fused_kernel_call,
-        cfg=cfg,
-        interpret=interpret,
-        batch_tile=batch_tile,
-        stream_input=stream_input,
-    )
-    axis = mesh.axis_names[0]
-    return jax.jit(
-        shard_map(fn, mesh=mesh, in_specs=P(axis), out_specs=P(axis), check_rep=False)
-    )
-
-
 def bg_denoise_sharded(
     images: jnp.ndarray,
-    cfg: BGConfig,
+    cfg: BGConfig | None = None,
     mesh: jax.sharding.Mesh | None = None,
     *,
     interpret: bool | None = None,
     batch_tile: int | None = None,
     stream_input: bool = False,
     quantize_output: bool = False,
+    plan=None,
 ) -> jnp.ndarray:
     """Data-parallel fused BG denoise: the multi-device service entry point.
 
@@ -154,75 +124,37 @@ def bg_denoise_sharded(
     padded (idle devices denoise zero frames that are dropped).
 
     ``quantize_output=True`` additionally applies the paper's output rounding
-    (elementwise, so it commutes with the sharding).
+    (elementwise, so it commutes with the sharding). Preferred form: a
+    mesh-carrying ``repro.plan.BGPlan`` via ``plan=``.
     """
-    squeeze = images.ndim == 2
-    if squeeze:
-        images = images[None]
-    mesh = _service_mesh(mesh)
-    if mesh is None or int(mesh.devices.size) == 1:
-        out = bg_fused_kernel_call(
-            images,
-            cfg,
-            interpret=interpret,
+    from repro.plan import BGPlan, warn_legacy_dispatch
+
+    if plan is None:
+        if cfg is None:
+            raise TypeError("bg_denoise_sharded needs cfg= or plan=")
+        warn_legacy_dispatch("bg_denoise_sharded")
+        plan = BGPlan(
+            cfg=cfg,
+            backend="fused_streamed" if stream_input else "fused",
             batch_tile=batch_tile,
-            stream_input=stream_input,
-        )
-    else:
-        b = images.shape[0]
-        padded = _pad_rows(images, _row_pad(int(mesh.devices.size), b))
-        call = _sharded_fused_call(cfg, mesh, interpret, batch_tile, stream_input)
-        out = call(padded)[:b]
-    if quantize_output:
-        out = _quantize(out, cfg)
-    return out[0] if squeeze else out
-
-
-@functools.lru_cache(maxsize=64)
-def _sharded_temporal_call(
-    cfg: BGConfig,
-    mesh: jax.sharding.Mesh,
-    interpret: bool | None,
-    batch_tile: int | None,
-):
-    """Jitted shard_map of the temporal fused kernel, cached per
-    (cfg, mesh, flags) — same rationale as :func:`_sharded_fused_call`: the
-    video packer dispatches once per pack, and repeat dispatches must hit
-    the compiled executable, not rebuild the shard_map wrapper."""
-
-    def call(frames, carry, alpha):
-        return bg_fused_kernel_call(
-            frames,
-            cfg,
+            mesh=_service_mesh(mesh),
+            quantize_output=quantize_output,
             interpret=interpret,
-            batch_tile=batch_tile,
-            carry=carry,
-            alpha=alpha,
         )
-
-    axis = mesh.axis_names[0]
-    spec = P(axis)
-    return jax.jit(
-        shard_map(
-            call,
-            mesh=mesh,
-            in_specs=(spec, spec, spec),
-            out_specs=(spec, spec),
-            check_rep=False,
-        )
-    )
+    return plan(images)
 
 
 def bg_temporal_sharded(
     frames: jnp.ndarray,
     carry: jnp.ndarray,
     alpha: jnp.ndarray,
-    cfg: BGConfig,
+    cfg: BGConfig | None = None,
     mesh: jax.sharding.Mesh | None = None,
     *,
     interpret: bool | None = None,
     batch_tile: int | None = None,
     quantize_output: bool = False,
+    plan=None,
 ):
     """Data-parallel temporal fused BG denoise: the video warm-path entry.
 
@@ -238,26 +170,22 @@ def bg_temporal_sharded(
     dispatch geometry differs from the single-device tiling (LLVM FMA-lane
     selection in the in-kernel blend — see the bg_fused blend comment) and
     bit-exactly otherwise. ``mesh=None`` auto-meshes over all local devices;
-    one device degrades to the plain call.
+    one device degrades to the plain call. Preferred form: a temporal
+    ``repro.plan.BGPlan`` via ``plan=``.
     """
-    mesh = _service_mesh(mesh)
-    if mesh is None or int(mesh.devices.size) == 1:
-        out, new_carry = bg_fused_kernel_call(
-            frames,
-            cfg,
-            interpret=interpret,
+    from repro.plan import BGPlan, warn_legacy_dispatch
+
+    if plan is None:
+        if cfg is None:
+            raise TypeError("bg_temporal_sharded needs cfg= or plan=")
+        warn_legacy_dispatch("bg_temporal_sharded")
+        plan = BGPlan(
+            cfg=cfg,
+            backend="fused",
+            temporal=True,
             batch_tile=batch_tile,
-            carry=carry,
-            alpha=alpha,
+            mesh=_service_mesh(mesh),
+            quantize_output=quantize_output,
+            interpret=interpret,
         )
-    else:
-        n = frames.shape[0]
-        pad = _row_pad(int(mesh.devices.size), n)
-        call = _sharded_temporal_call(cfg, mesh, interpret, batch_tile)
-        out, new_carry = call(
-            _pad_rows(frames, pad), _pad_rows(carry, pad), _pad_rows(alpha, pad)
-        )
-        out, new_carry = out[:n], new_carry[:n]
-    if quantize_output:
-        out = _quantize(out, cfg)
-    return out, new_carry
+    return plan(frames, carry=carry, alpha=alpha)

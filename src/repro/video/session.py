@@ -55,22 +55,58 @@ class StreamSession:
 
 
 class MultiStreamPacker:
-    """Batches one frame per live stream into a single temporal dispatch."""
+    """Batches one frame per live stream into a single temporal dispatch.
+
+    Dispatch is plan-driven: construct with ``plan=`` (e.g. from
+    ``repro.plan.plan_for``, which auto-tunes the fused-kernel batch tile
+    from frame geometry) and the packer asks the plan for its tile instead
+    of being handed ``batch_tile=``. The legacy kwarg form still works and
+    routes into an equivalent plan (``batch_tile=None`` = kernel default,
+    preserving the pre-plan dispatch bit-for-bit).
+    """
 
     def __init__(
         self,
-        cfg: BGConfig,
+        cfg: BGConfig | None = None,
         mesh=None,
         interpret: Optional[bool] = None,
         batch_tile: Optional[int] = None,
         quantize_output: bool = True,
+        *,
+        plan=None,
     ):
-        self.cfg = cfg
-        self.mesh = mesh
-        self.interpret = interpret
-        self.batch_tile = batch_tile
-        self.quantize_output = quantize_output
+        if plan is None:
+            if cfg is None:
+                raise TypeError("MultiStreamPacker needs cfg= or plan=")
+            from repro.plan import BGPlan, warn_legacy_dispatch
+            from repro.sharding.bg_shard import _service_mesh
+
+            if mesh is not None or batch_tile is not None:
+                warn_legacy_dispatch("MultiStreamPacker")
+            plan = BGPlan(
+                cfg=cfg,
+                backend="fused",
+                batch_tile=batch_tile,
+                mesh=_service_mesh(mesh),
+                quantize_output=quantize_output,
+                interpret=interpret,
+            )
+        if plan.backend == "fused_streamed":
+            # rejected once, here, instead of failing the first warm pack's
+            # as_temporal(True) mid-service: the manual-DMA input path does
+            # not compose with the temporal carry, and pack composition
+            # (cold vs warm) is timing-dependent under the async engine
+            raise ValueError(
+                "MultiStreamPacker needs a temporal-capable plan; "
+                "backend='fused_streamed' cannot carry the grid EMA — use "
+                "plan_for(..., temporal=True) (backend='fused')"
+            )
+        self.plan = plan
         self.sessions: Dict[Hashable, StreamSession] = {}
+
+    @property
+    def cfg(self) -> BGConfig:
+        return self.plan.cfg
 
     # ------------------------------------------------------------- streams
     def open(self, sid: Hashable, alpha: float = 0.0) -> StreamSession:
@@ -112,19 +148,16 @@ class MultiStreamPacker:
         batch = jnp.stack([arrs[s] for s in sids])
         warm = [s for s in sids if sessions[s].alpha > 0.0]
         results = {}
+        # the packer asks the plan for this pack's tile (the plan's own
+        # auto-tuned/legacy-default value clamped to the per-device shard,
+        # exactly the clamp the kernel would apply — an explicit plan
+        # decision instead of an implicit kernel one)
+        plan = self.plan.with_tile(self.plan.tile_for(len(sids)))
 
         if not warm:
             # all-cold pack: the carry-free per-frame fused path — nothing
             # temporal is materialized anywhere (temporal_denoise contract)
-            out, _ = temporal_denoise(
-                batch,
-                self.cfg,
-                alpha=0.0,
-                mesh=self.mesh,
-                interpret=self.interpret,
-                batch_tile=self.batch_tile,
-                quantize_output=self.quantize_output,
-            )
+            out, _ = temporal_denoise(batch, alpha=0.0, plan=plan)
             for i, s in enumerate(sids):
                 results[s] = out[i]
         else:
@@ -145,14 +178,7 @@ class MultiStreamPacker:
                 np.float32,
             )
             out, new_carry = temporal_denoise(
-                batch,
-                self.cfg,
-                carry=carry,
-                alpha=alpha,
-                mesh=self.mesh,
-                interpret=self.interpret,
-                batch_tile=self.batch_tile,
-                quantize_output=self.quantize_output,
+                batch, carry=carry, alpha=alpha, plan=plan
             )
             for i, s in enumerate(sids):
                 results[s] = out[i]

@@ -55,14 +55,29 @@ from repro.core.bilateral_grid import (
     _round_half_up,
     conv3_axis,
     gaussian_taps,
-    grid_normalize,
     grid_shape,
-    grid_slice,
-    quantize_intensity,
 )
-from repro.sharding.bg_shard import bg_denoise_sharded, bg_temporal_sharded
 
 __all__ = ["blurred_grid_batch", "carry_shape", "temporal_denoise"]
+
+
+@functools.lru_cache(maxsize=128)
+def _legacy_plan(cfg, staged, batch_tile, mesh, quantize_output, interpret):
+    """Cached legacy-kwargs -> BGPlan mapping (temporal_denoise sits on the
+    packer's per-pack hot path; rebuilding the frozen plan per call costs
+    more than the lookup)."""
+    from repro.plan import BGPlan
+    from repro.sharding.bg_shard import _service_mesh
+
+    return BGPlan(
+        cfg=cfg,
+        backend="reference" if staged else "fused",
+        temporal=False,  # the temporal/per-frame variant is derived per pack
+        batch_tile=batch_tile,
+        mesh=None if staged else _service_mesh(mesh),
+        quantize_output=quantize_output,
+        interpret=interpret,
+    )
 
 
 def carry_shape(h: int, w: int, cfg: BGConfig) -> Tuple[int, int, int, int]:
@@ -102,29 +117,9 @@ def blurred_grid_batch(frames: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
     return grid
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "quantize_output"))
-def _temporal_step(
-    frames: jnp.ndarray,
-    carry: jnp.ndarray,
-    alpha: jnp.ndarray,
-    cfg: BGConfig,
-    quantize_output: bool,
-):
-    """The staged reference oracle: grid visible between GF and TI."""
-    frames = frames.astype(jnp.float32)
-    blurred = blurred_grid_batch(frames, cfg)
-    a = alpha.astype(jnp.float32).reshape((-1, 1, 1, 1, 1))
-    new_carry = (1.0 - a) * blurred + a * carry
-    grid_f = grid_normalize(new_carry)
-    out = jax.vmap(lambda gf, f: grid_slice(gf, f, cfg))(grid_f, frames)
-    if quantize_output:
-        out = quantize_intensity(out, cfg)
-    return out, new_carry
-
-
 def temporal_denoise(
     frames: jnp.ndarray,
-    cfg: BGConfig,
+    cfg: BGConfig | None = None,
     carry: Optional[jnp.ndarray] = None,
     alpha=0.0,
     *,
@@ -133,6 +128,7 @@ def temporal_denoise(
     batch_tile: Optional[int] = None,
     quantize_output: bool = True,
     staged: bool = False,
+    plan=None,
 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """One temporal step for a pack of streams: denoise + advance the carry.
 
@@ -152,6 +148,12 @@ def temporal_denoise(
       staged: run the staged jnp reference pipeline instead of the fused
         temporal kernel. The oracle for tests/benchmarks only — the fused
         path is the service path for every alpha.
+      plan: a base ``repro.plan.BGPlan`` that fixes the dispatch (backend,
+        mesh, batch_tile, quantization, interpret) — the preferred form; the
+        legacy kwargs above route into an equivalent plan. The temporal /
+        per-frame variant of the plan is derived here from the pack
+        (``with_options(temporal=...)``), so one base plan serves warm,
+        cold and mixed packs.
 
     Returns ``(out, new_carry)``. When ``carry is None`` and every alpha is
     zero (a pure per-frame pack) the fused kernel path is dispatched with no
@@ -162,6 +164,18 @@ def temporal_denoise(
     runs the EMA in VMEM (``a == 0`` rows still bit-identical to the
     per-frame path) and the stream axis shards over the mesh.
     """
+    from repro.plan import warn_legacy_dispatch
+
+    if plan is not None and staged:
+        raise ValueError("pass either plan= or staged=, not both")
+    if plan is None:
+        if cfg is None:
+            raise TypeError("temporal_denoise needs cfg= or plan=")
+        if staged or mesh is not None or batch_tile is not None:
+            warn_legacy_dispatch("temporal_denoise")
+        plan = _legacy_plan(
+            cfg, staged, batch_tile, mesh, quantize_output, interpret
+        )
     frames = jnp.asarray(frames)
     squeeze = frames.ndim == 2
     if squeeze:
@@ -172,38 +186,22 @@ def temporal_denoise(
     alpha_np = np.broadcast_to(np.asarray(alpha, np.float32), (n,))
     if np.any(alpha_np < 0.0) or np.any(alpha_np >= 1.0):
         raise ValueError(f"temporal alpha must be in [0, 1), got {alpha}")
+    temporal_needed = staged or plan.backend == "reference"
 
-    if carry is None and not alpha_np.any() and not staged:
-        out = bg_denoise_sharded(
-            frames,
-            cfg,
-            mesh=mesh,
-            interpret=interpret,
-            batch_tile=batch_tile,
-            quantize_output=quantize_output,
-        )
+    if carry is None and not alpha_np.any() and not temporal_needed:
+        out = plan.as_temporal(False)(frames)
         return (out[0] if squeeze else out), None
 
     if carry is None:
         # warm-up pack of a temporal stream set: no history yet, so every
         # effective alpha is 0 this step, but the carry must be produced.
-        carry = jnp.zeros((n,) + carry_shape(*frames.shape[1:], cfg), jnp.float32)
+        carry = jnp.zeros(
+            (n,) + carry_shape(*frames.shape[1:], plan.cfg), jnp.float32
+        )
         alpha_np = np.zeros((n,), np.float32)
     if carry.shape[0] != n:
         raise ValueError(f"carry leading axis {carry.shape[0]} != n frames {n}")
-    if staged:
-        out, new_carry = _temporal_step(
-            frames, carry, jnp.asarray(alpha_np), cfg, quantize_output
-        )
-    else:
-        out, new_carry = bg_temporal_sharded(
-            frames,
-            carry,
-            jnp.asarray(alpha_np),
-            cfg,
-            mesh=mesh,
-            interpret=interpret,
-            batch_tile=batch_tile,
-            quantize_output=quantize_output,
-        )
+    out, new_carry = plan.as_temporal(True)(
+        frames, carry=carry, alpha=jnp.asarray(alpha_np)
+    )
     return (out[0] if squeeze else out), new_carry
