@@ -190,6 +190,15 @@ def run(quick: bool = False):
         ("deadline_misses", "count"),
         ("latency_ms_p50", "ms"),
         ("latency_ms_p99", "ms"),
+        # PR-6 reliability counters — all zero on this clean run (the chaos
+        # soak exercises them); exported so the snapshot trajectory shows a
+        # healthy serve as *measured-zero*, not unknown
+        ("failed", "count"),
+        ("retries", "count"),
+        ("fallbacks", "count"),
+        ("carry_resets", "count"),
+        ("shed", "count"),
+        ("watchdog_trips", "count"),
     ):
         rows.append(
             (

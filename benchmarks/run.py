@@ -144,7 +144,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: tables,quality,kernels,throughput,sharded,video,lm,roofline",
+        help="comma list: tables,quality,kernels,throughput,sharded,video,chaos,lm,roofline",
     )
     ap.add_argument(
         "--no-snapshot",
@@ -154,6 +154,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
+        bench_bg_chaos,
         bench_bg_kernels,
         bench_bg_quality,
         bench_bg_sharded,
@@ -171,6 +172,7 @@ def main() -> None:
         "throughput": bench_bg_throughput,
         "sharded": bench_bg_sharded,
         "video": bench_video_stream,
+        "chaos": bench_bg_chaos,
         "lm": bench_lm,
         "roofline": bench_roofline,
     }

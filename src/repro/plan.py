@@ -110,6 +110,7 @@ __all__ = [
     "auto_batch_tile",
     "auto_stream_input",
     "step_bytes_per_frame",
+    "set_dispatch_hook",
     "VMEM_STEP_BUDGET_BYTES",
     "STREAM_INPUT_THRESHOLD_BYTES",
     "MAX_AUTO_TILE",
@@ -301,6 +302,27 @@ class BGPlan:
             return self
         return _temporal_variant(self, temporal)
 
+    def fallback_ladder(self) -> Tuple["BGPlan", ...]:
+        """The degradation ladder for fault-tolerant serving: this plan
+        first, then progressively simpler-but-sturdier variants
+        (``fused_streamed -> fused -> reference``; any other backend falls
+        straight to ``reference``). Each rung drops the machinery most
+        likely to be implicated in a kernel-backend failure — the manual
+        DMA first, the Pallas kernel second — and the final rung is the
+        vmapped jnp oracle, which runs anywhere XLA does. ``reference``
+        rungs shed the mesh (it does not shard) and their ``batch_tile``
+        normalizes away; ``temporal`` survives every rung (both ``fused``
+        and ``reference`` carry the grid EMA). Consumed by
+        ``repro.reliability.retry.GuardedDispatch``."""
+        ladder = [self]
+        if self.backend == "fused_streamed":
+            ladder.append(self.with_options(backend="fused"))
+        if self.backend != "reference":
+            ladder.append(
+                self.with_options(backend="reference", mesh=None, batch_tile=None)
+            )
+        return tuple(ladder)
+
     # ------------------------------------------------------------- dispatch
     def executable(self):
         """The plan's compiled callable (one per equal plan, cached).
@@ -318,6 +340,10 @@ class BGPlan:
         return fn
 
     def __call__(self, frames, carry=None, alpha=None):
+        if _DISPATCH_HOOK is not None:
+            # host-side pre-dispatch hook (fault injection / tracing); see
+            # set_dispatch_hook — a raised exception aborts this dispatch
+            _DISPATCH_HOOK(self)
         frames = jnp.asarray(frames)
         if self.temporal:
             if carry is None or alpha is None:
@@ -475,6 +501,25 @@ def _temporal_variant(plan: BGPlan, temporal: bool) -> BGPlan:
 @functools.lru_cache(maxsize=256)
 def _tiled_variant(plan: BGPlan, batch_tile: int) -> BGPlan:
     return dataclasses.replace(plan, batch_tile=batch_tile)
+
+
+# --------------------------------------------------------- dispatch hook
+# One process-wide host-side hook run at the top of every BGPlan.__call__,
+# before any device work. The integration point for fault injection
+# (repro.reliability.faults.FaultInjector.plan_hook installs one that can
+# raise InjectedFault) and for dispatch tracing; None (the default) costs a
+# single global load per dispatch.
+_DISPATCH_HOOK = None
+
+
+def set_dispatch_hook(hook):
+    """Install ``hook(plan)`` as the global pre-dispatch hook; returns the
+    previous hook (restore it when done — see ``FaultInjector.plan_hook``
+    for the context-managed form). Pass ``None`` to clear."""
+    global _DISPATCH_HOOK
+    prev = _DISPATCH_HOOK
+    _DISPATCH_HOOK = hook
+    return prev
 
 
 # ------------------------------------------------------- legacy kwarg shims

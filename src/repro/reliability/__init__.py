@@ -1,0 +1,82 @@
+"""Fault-tolerant serving: fault injection, guards, retry/fallback.
+
+The paper's headline property is a datapath that never stalls; this
+package is the serving-side analog — an engine that **degrades gracefully**
+instead of wedging or silently corrupting streams. It is the robustness
+layer the fleet/router work (ROADMAP item 1) sits on. Four pieces:
+
+  ``errors``   structured exception types: every failure a client observes
+               through a Future is typed (``AdmissionError``,
+               ``DeadlineExceeded``, ``EngineTimeout``, ``NonFiniteOutput``,
+               ``AllBackendsFailed``, ``EngineClosed``, ``InjectedFault``).
+  ``faults``   deterministic, seedable fault injection: a ``FaultPlan``
+               schedules NaN/Inf pixel corruption, carry corruption/loss,
+               dispatch exceptions, and completion hangs; a
+               ``FaultInjector`` fires them at the engine's hook points (or
+               process-wide via ``FaultInjector.plan_hook()`` +
+               ``repro.plan.set_dispatch_hook``). Every failure mode below
+               is testable without real hardware — see the ``faults``
+               module docstring for the hook-point contract (the API the
+               future router PR reuses for its own chaos gates).
+  ``guards``   admission validation at ``submit`` (shape/dtype/finite) plus
+               lazy per-pack ``jnp.isfinite`` reductions on outputs and
+               temporal carries. A bad carry triggers per-stream
+               **quarantine**: reset to cold, re-warmed through the PR-3
+               effective-alpha-0 machinery, counted — never poisoning later
+               frames.
+  ``retry``    bounded exponential-backoff retry, per-rung circuit
+               breakers, and the backend **fallback ladder**
+               (``BGPlan.fallback_ladder()``: ``fused_streamed -> fused ->
+               reference``) so a kernel-backend failure serves degraded
+               output rather than an exception.
+
+``serving.AsyncFrameEngine`` wires all four together and adds the
+**watchdog** (per-inflight-batch deadline on ``block_until_ready``) and
+admission-time shedding of past-deadline frames; ``EngineStats`` exposes
+``failed`` / ``retries`` / ``fallbacks`` / ``carry_resets`` / ``shed`` /
+``watchdog_trips``. ``benchmarks/bench_bg_chaos.py`` soaks the stack under
+an injected fault schedule and gates recovery throughput and
+zero-silent-corruption in CI.
+"""
+from .errors import (
+    AdmissionError,
+    AllBackendsFailed,
+    DeadlineExceeded,
+    EngineClosed,
+    EngineTimeout,
+    InjectedFault,
+    NonFiniteOutput,
+    ReliabilityError,
+)
+from .faults import FAULT_KINDS, Fault, FaultInjector, FaultPlan
+from .guards import (
+    DEFAULT_CARRY_LIMIT,
+    DispatchGuard,
+    carry_ok_rows,
+    finite_rows,
+    validate_frame,
+)
+from .retry import CircuitBreaker, GuardedDispatch, RetryPolicy
+
+__all__ = [
+    "ReliabilityError",
+    "AdmissionError",
+    "InjectedFault",
+    "EngineTimeout",
+    "DeadlineExceeded",
+    "NonFiniteOutput",
+    "AllBackendsFailed",
+    "EngineClosed",
+    "Fault",
+    "FaultPlan",
+    "FaultInjector",
+    "FAULT_KINDS",
+    "DEFAULT_CARRY_LIMIT",
+    "DispatchGuard",
+    "validate_frame",
+    "finite_rows",
+    "carry_ok_rows",
+    "RetryPolicy",
+    "CircuitBreaker",
+    "GuardedDispatch",
+]

@@ -16,6 +16,24 @@ Frame serving comes in two flavors; pick by how the caller wants to wait:
     queues for backpressure, latency budgets, multi-stream video via a
     ``repro.video`` packer, and strictly higher sustained frames/sec than
     the synchronous engine (gated in benchmarks/bench_video_stream.py).
+
+The async front is additionally **fault-tolerant** (the
+``repro.reliability`` wiring): admission validation at ``submit``
+(``AdmissionError`` before a NaN frame can touch a queue or a temporal
+carry), guarded dispatch with bounded retries and the backend fallback
+ladder (``fused_streamed -> fused -> reference`` behind per-rung circuit
+breakers), lazy per-row finite-guards on outputs and carries with
+per-stream carry **quarantine**, collect-time shedding of past-deadline
+requests (``DeadlineExceeded``), and a per-inflight-batch **watchdog**
+(``EngineTimeout``) so a wedged device fails one batch, not the service.
+Every failure a client observes through a Future is a typed
+``repro.reliability.errors`` exception; ``EngineStats`` counts ``failed`` /
+``retries`` / ``fallbacks`` / ``carry_resets`` / ``shed`` /
+``watchdog_trips``; ``engine.fault_injector`` accepts a deterministic
+``reliability.FaultInjector`` so every failure mode is drivable in tests
+and the ``benchmarks/bench_bg_chaos.py`` CI soak. The synchronous engine
+stays guard-free on purpose — it is the simple, deterministic oracle the
+async front is equivalence-tested against.
 """
 from .async_engine import AsyncFrameEngine, AsyncFrameRequest, EngineStats
 from .engine import Request, ServeEngine, make_prefill, make_serve_step

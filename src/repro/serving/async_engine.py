@@ -25,7 +25,10 @@ device. Submission backpressure is the bounded request queue itself:
 Micro-batching is deadline-aware: a batch dispatches when it is full, when
 the batch window since its first frame expires, or when any queued request's
 deadline is within ``deadline_margin_ms`` — low-traffic frames are not held
-hostage to batch-full, and latency-budgeted requests jump the window.
+hostage to batch-full, and latency-budgeted requests jump the window. A
+request whose deadline has *already passed* at collect time is **shed**: its
+future fails with a structured ``DeadlineExceeded`` instead of the batch
+paying full dispatch cost for a frame its client has given up on.
 
 Video mode: constructed with a ``repro.video.session.MultiStreamPacker``,
 requests carry a ``stream_id`` and each micro-batch takes at most one frame
@@ -37,11 +40,43 @@ one micro-batch and the pack's stream axis shards over the local mesh. The
 per-stream grid carries chain through JAX's async dataflow, so back-to-back
 packs still overlap.
 
+Fault tolerance (the ``repro.reliability`` wiring — PR 6):
+
+  * **Admission** — ``submit`` validates shape/dtype/finiteness host-side
+    (``AdmissionError``) so one NaN camera frame cannot enter the pipeline,
+    let alone the temporal EMA. Disable with ``admission_checks=False``.
+  * **Guarded dispatch** — every launch runs through a
+    ``reliability.GuardedDispatch``: bounded exponential-backoff retries,
+    then the plan's **fallback ladder** (``fused_streamed -> fused ->
+    reference``) behind per-rung circuit breakers. A transient fault costs
+    a retry; a dead kernel backend serves degraded (reference-oracle)
+    output instead of an exception. Caller errors (unknown stream, bad
+    shape) still fail fast with the original exception.
+  * **Finite-guards + carry quarantine** — each dispatch launches lazy
+    per-row ``isfinite`` reductions over outputs (and, in video mode, the
+    advanced temporal carries). At completion, a non-finite output row
+    fails exactly that request with ``NonFiniteOutput``; a bad carry row
+    quarantines exactly that stream (``packer.quarantine``: reset to cold,
+    re-warm through the standard first-frame path) instead of poisoning
+    every later frame.
+  * **Watchdog** — ``watchdog_ms`` bounds ``block_until_ready`` per
+    in-flight batch. A wedged device (or injected hang) fails that batch's
+    futures with a structured ``EngineTimeout``, charges the breaker of the
+    rung that dispatched it, and the engine keeps serving. Stateless
+    (non-video) batches get one synchronous guarded redispatch first —
+    a transient completion failure costs a retry, not the batch.
+  * **Fault injection** — assign ``engine.fault_injector`` (a
+    ``reliability.FaultInjector``) to fire a deterministic fault schedule
+    at the hook points above; ``benchmarks/bench_bg_chaos.py`` gates
+    recovery throughput and zero-silent-corruption on it in CI.
+
 Telemetry: ``stats()`` returns a structured :class:`EngineStats` snapshot
 (queue/in-flight depth, dispatch count, mean batch size, p50/p99 request
-latency, deadline misses) consumed by ``benchmarks/bench_video_stream.py``
-and its ``BENCH_<ts>.json`` exporter; ``stats()["key"]`` indexing survives
-as a legacy shim.
+latency, deadline misses, plus the reliability counters ``failed`` /
+``retries`` / ``fallbacks`` / ``carry_resets`` / ``shed`` /
+``watchdog_trips``) consumed by ``benchmarks/bench_video_stream.py`` and
+its ``BENCH_<ts>.json`` exporter; ``stats()["key"]`` indexing survives as a
+legacy shim.
 
 Dispatch is plan-driven: pass a ``repro.plan.BGPlan`` via ``plan=`` (or a
 packer whose plan carries the video dispatch); the legacy ``cfg``/``mesh``/
@@ -60,8 +95,20 @@ from typing import Deque, Dict, Hashable, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bilateral_grid import BGConfig
+from repro.reliability import (
+    DeadlineExceeded,
+    DispatchGuard,
+    EngineClosed,
+    EngineTimeout,
+    GuardedDispatch,
+    NonFiniteOutput,
+    RetryPolicy,
+    finite_rows,
+    validate_frame,
+)
 
 __all__ = ["AsyncFrameEngine", "AsyncFrameRequest", "EngineStats"]
 
@@ -73,6 +120,15 @@ class EngineStats:
     """End-of-interval engine telemetry snapshot (ROADMAP's "structured
     metrics" item): counts are since engine start, depths are instantaneous,
     latencies are over the last 4096 completed requests.
+
+    Reliability counters (PR 6): ``failed`` — requests resolved with an
+    exception (dispatch/completion failures, finite-guard rejections);
+    ``retries`` — guarded-dispatch re-attempts; ``fallbacks`` — dispatches
+    served from a fallback-ladder rung below the primary backend;
+    ``carry_resets`` — temporal carries quarantined back to cold; ``shed``
+    — requests dropped at collect time because their deadline had already
+    passed; ``watchdog_trips`` — in-flight batches that exceeded the
+    completion watchdog.
 
     ``stats["key"]`` indexing is kept as a legacy shim for the former dict
     form; prefer attribute access. ``as_dict()`` feeds exporters (the
@@ -88,6 +144,12 @@ class EngineStats:
     mean_batch: float
     latency_ms_p50: float
     latency_ms_p99: float
+    failed: int = 0
+    retries: int = 0
+    fallbacks: int = 0
+    carry_resets: int = 0
+    shed: int = 0
+    watchdog_trips: int = 0
 
     def __getitem__(self, key: str):
         if key not in self.__dataclass_fields__:
@@ -127,6 +189,13 @@ class AsyncFrameEngine:
         interpret: Optional[bool] = None,
         packer=None,
         plan=None,
+        fault_injector=None,
+        watchdog_ms: Optional[float] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        fallback: bool = True,
+        admission_checks: bool = True,
+        output_guard: bool = True,
+        carry_limit: Optional[float] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -134,6 +203,8 @@ class AsyncFrameEngine:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if watchdog_ms is not None and watchdog_ms <= 0:
+            raise ValueError(f"watchdog_ms must be > 0 or None, got {watchdog_ms}")
         if packer is not None:
             # video mode dispatches through the packer's own plan — a
             # second, different plan would be silently ignored
@@ -173,11 +244,27 @@ class AsyncFrameEngine:
         self.deadline_margin = deadline_margin_ms / 1e3
         self.packer = packer
 
+        # reliability wiring (repro.reliability; see the module docstring)
+        self.fault_injector = fault_injector  # assignable at runtime
+        self.watchdog = None if watchdog_ms is None else watchdog_ms / 1e3
+        self.admission_checks = admission_checks
+        self.output_guard = output_guard
+        self.carry_limit = carry_limit
+        ladder = self.plan.fallback_ladder() if fallback else (self.plan,)
+        self._guard = GuardedDispatch(
+            ladder,
+            retry_policy,
+            on_retry=self._count_retry,
+            on_fallback=self._count_fallback,
+        )
+        self._packer_lock = threading.Lock()
+
         self._queue: "queue.Queue" = queue.Queue(maxsize=max_queue)
         self._inflight: "queue.Queue" = queue.Queue(maxsize=max_inflight)
         self._held: Deque[AsyncFrameRequest] = deque()  # deferred same-stream
         self._uid = itertools.count()
         self._closed = False
+        self._stop = threading.Event()
         self._lock = threading.Lock()
         self._outstanding = 0
         self._drained = threading.Condition(self._lock)
@@ -188,6 +275,12 @@ class AsyncFrameEngine:
         self._completed = 0
         self._submitted = 0
         self._deadline_misses = 0
+        self._failed = 0
+        self._retries = 0
+        self._fallbacks = 0
+        self._carry_resets = 0
+        self._shed = 0
+        self._watchdog_trips = 0
 
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="bg-frame-dispatch", daemon=True
@@ -212,10 +305,21 @@ class AsyncFrameEngine:
         Blocks when ``max_queue`` requests are already pending (``block=False``
         raises ``queue.Full`` instead — the service's load-shed hook).
         ``deadline_ms`` is a latency budget from now; an expiring deadline
-        forces its micro-batch out early.
+        forces its micro-batch out early, and a deadline that has already
+        passed by collect time sheds the request with ``DeadlineExceeded``.
+        Raises ``AdmissionError`` (a ``ValueError``) for malformed or
+        non-finite frames — rejected here, before they can touch the queue
+        or a temporal carry.
         """
         if self.packer is not None and stream_id is None:
             raise ValueError("video mode: submit needs a stream_id")
+        if self.admission_checks:
+            frame = validate_frame(frame, stream_id=stream_id)
+        inj = self.fault_injector
+        if inj is not None:
+            # post-admission hook: simulates in-flight corruption that
+            # admission cannot see (the quarantine machinery's test double)
+            frame = inj.corrupt_frame(frame, stream_id)
         now = time.monotonic()
         req = AsyncFrameRequest(
             uid=next(self._uid),
@@ -230,7 +334,7 @@ class AsyncFrameEngine:
             # flag set: a submit can never slip its request in behind the
             # shutdown sentinel (close's flush waits on _outstanding first)
             if self._closed:
-                raise RuntimeError("engine is closed")
+                raise EngineClosed("engine is closed")
             self._outstanding += 1
             self._submitted += 1
         try:
@@ -256,17 +360,27 @@ class AsyncFrameEngine:
     def close(self, timeout: float = 30.0) -> None:
         """Drain outstanding work, then stop both threads (best-effort within
         ``timeout`` — the threads are daemons, so a wedged device can delay
-        but never hang interpreter exit)."""
+        but never hang interpreter exit).
+
+        Robust to a timed-out flush: the ``_stop`` event (polled by the
+        dispatch loop every 100ms and by its in-flight ``put``) guarantees
+        shutdown makes progress even when the request queue is still full —
+        the old path gave up on ``queue.Full`` and joined neither thread.
+        Requests still queued at stop fail with structured ``EngineClosed``,
+        so no future is ever left pending.
+        """
         with self._lock:
             if self._closed:
                 return
             self._closed = True
         self.flush(timeout=timeout)
+        self._stop.set()
         try:
-            # bounded: if flush timed out the queue may still be full
-            self._queue.put(_SENTINEL, timeout=max(timeout, 0.1))
+            # best-effort wake-up; a full queue is fine — the dispatch
+            # loop's 100ms poll notices _stop without it
+            self._queue.put_nowait(_SENTINEL)
         except queue.Full:
-            return
+            pass
         self._dispatcher.join(timeout=timeout)
         self._completer.join(timeout=timeout)
 
@@ -294,7 +408,21 @@ class AsyncFrameEngine:
                 mean_batch=(sum(sizes) / len(sizes)) if sizes else 0.0,
                 latency_ms_p50=_pct(lat, 0.50),
                 latency_ms_p99=_pct(lat, 0.99),
+                failed=self._failed,
+                retries=self._retries,
+                fallbacks=self._fallbacks,
+                carry_resets=self._carry_resets,
+                shed=self._shed,
+                watchdog_trips=self._watchdog_trips,
             )
+
+    def _count_retry(self) -> None:
+        with self._lock:
+            self._retries += 1
+
+    def _count_fallback(self) -> None:
+        with self._lock:
+            self._fallbacks += 1
 
     # ------------------------------------------------------------ dispatch
     def _get_next(self, timeout: Optional[float]):
@@ -306,14 +434,61 @@ class AsyncFrameEngine:
         except queue.Empty:
             return None
 
+    def _shed_expired(self, req: AsyncFrameRequest) -> bool:
+        """Load-shedding at collect time: a request whose deadline already
+        passed fails with structured ``DeadlineExceeded`` instead of being
+        dispatched at full cost past its SLA (ROADMAP item 1)."""
+        if req.deadline is None:
+            return False
+        now = time.monotonic()
+        if now <= req.deadline:
+            return False
+        if req.future.set_running_or_notify_cancel():
+            req.future.set_exception(
+                DeadlineExceeded(req.uid, late_s=now - req.deadline)
+            )
+        with self._lock:
+            self._shed += 1
+            self._deadline_misses += 1
+            self._outstanding -= 1
+            self._drained.notify_all()
+        return True
+
+    def _drain_on_stop(self) -> None:
+        """Fail whatever is still queued/held at shutdown (a timed-out flush
+        left stragglers) so no future is ever abandoned pending."""
+        leftovers: List[AsyncFrameRequest] = list(self._held)
+        self._held.clear()
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is _SENTINEL:
+                continue
+            leftovers.append(item)
+        if leftovers:
+            self._finish(
+                leftovers, error=EngineClosed("engine closed before dispatch")
+            )
+
     def _collect_batch(self) -> Optional[List[AsyncFrameRequest]]:
         """Block for the first request, then fill until batch-full, window
-        expiry, or an imminent request deadline. Returns None on shutdown."""
-        first = self._get_next(timeout=0.1)
-        if first is None:
-            return []
-        if first is _SENTINEL:
-            return None
+        expiry, or an imminent request deadline. Sheds already-expired
+        requests. Returns None on shutdown."""
+        while True:
+            first = self._get_next(timeout=0.1)
+            if first is None:
+                if self._stop.is_set():
+                    self._drain_on_stop()
+                    return None
+                return []
+            if first is _SENTINEL:
+                self._drain_on_stop()
+                return None
+            if self._shed_expired(first):
+                continue
+            break
         batch = [first]
         streams = {first.stream_id}
         deferred: List[AsyncFrameRequest] = []
@@ -334,8 +509,13 @@ class AsyncFrameEngine:
             if nxt is None:
                 break
             if nxt is _SENTINEL:
-                self._queue.put(_SENTINEL)  # re-arm shutdown for the next loop
+                try:  # re-arm shutdown for the next loop
+                    self._queue.put_nowait(_SENTINEL)
+                except queue.Full:
+                    self._stop.set()  # the 100ms poll path takes over
                 break
+            if self._shed_expired(nxt):
+                continue
             if self.packer is not None and nxt.stream_id in streams:
                 deferred.append(nxt)  # one frame per stream per pack
                 continue
@@ -346,70 +526,246 @@ class AsyncFrameEngine:
         self._held.extend(deferred)
         return batch
 
-    def _launch(self, batch: List[AsyncFrameRequest]):
-        """Stack on host, transfer, and dispatch (async) one micro-batch.
-        Returns the lazy per-request outputs, submission-ordered."""
+    def _launch_with(self, plan, batch: List[AsyncFrameRequest]):
+        """Stack on host, transfer, and dispatch (async) one micro-batch via
+        ``plan``. Returns ``(outs, guard)``: the lazy per-request outputs in
+        submission order plus the batch's lazy finite-guard flags."""
         if self.packer is not None:
             by_sid = {r.stream_id: r.frame for r in batch}
-            out = self.packer.pack(by_sid)
-            return [out[r.stream_id] for r in batch]
+            with self._packer_lock:
+                out, guard = self.packer.pack_guarded(
+                    by_sid, plan=None if plan is self.plan else plan,
+                    carry_limit=self.carry_limit,
+                )
+            return [out[r.stream_id] for r in batch], guard
         stacked = jnp.stack([jnp.asarray(r.frame, jnp.float32) for r in batch])
-        if self.plan.mesh is None:
+        if plan.mesh is None:
             stacked = jax.device_put(stacked)  # overlap transfer with compute
-        out = self.plan(stacked)
-        return [out[i] for i in range(len(batch))]
+        out = plan(stacked)
+        guard = DispatchGuard(
+            out_ok=finite_rows(out) if self.output_guard else None
+        )
+        return [out[i] for i in range(len(batch))], guard
+
+    def _guarded_launch(self, batch: List[AsyncFrameRequest]):
+        """One guarded dispatch: retries + fallback ladder + breakers.
+        Returns ``(outs, guard, rung, dispatch_index)``."""
+        box = {}
+
+        def attempt(plan):
+            inj = self.fault_injector
+            box["didx"] = inj.on_dispatch(plan.backend) if inj else None
+            return self._launch_with(plan, batch)
+
+        (outs, guard), rung = self._guard.call(attempt)
+        return outs, guard, rung, box.get("didx")
 
     def _dispatch_loop(self):
         while True:
             batch = self._collect_batch()
-            if batch is None:  # sentinel: propagate shutdown downstream
-                self._inflight.put(_SENTINEL)
+            if batch is None:  # shutdown: propagate downstream
+                try:
+                    self._inflight.put(_SENTINEL, timeout=1.0)
+                except queue.Full:
+                    pass  # completer wedged; it is a daemon
                 return
             if not batch:
                 continue
             try:
-                outs = self._launch(batch)
-            except Exception as exc:  # config/shape errors -> fail the batch
+                outs, guard, rung, didx = self._guarded_launch(batch)
+            except Exception as exc:  # caller errors + exhausted ladder
                 self._finish(batch, error=exc)
                 continue
             with self._lock:
                 self._dispatches += 1
                 self._batch_sizes.append(len(batch))
-            # backpressure: at most max_inflight launched batches downstream
-            self._inflight.put((batch, outs))
+            # backpressure: at most max_inflight launched batches downstream;
+            # stop-aware so a wedged completion thread cannot pin shutdown
+            item = (batch, outs, guard, rung, didx)
+            while True:
+                try:
+                    self._inflight.put(item, timeout=0.2)
+                    break
+                except queue.Full:
+                    if self._stop.is_set():
+                        self._finish(
+                            batch,
+                            error=EngineClosed("engine closed mid-flight"),
+                        )
+                        break
 
     # ---------------------------------------------------------- completion
-    def _finish(self, batch, outs=None, error=None):
+    def _await(self, payload, didx, batch, with_hook: bool = True):
+        """Watchdog-bounded realization of ``payload`` (any pytree).
+
+        Runs the injected completion hook (simulated hangs) plus
+        ``block_until_ready`` inside the monitored region; a wedged device
+        and an injected hang are indistinguishable past the deadline —
+        both raise structured ``EngineTimeout`` and count a watchdog trip.
+        """
+
+        def work():
+            inj = self.fault_injector if with_hook else None
+            if inj is not None:
+                inj.on_complete(didx)
+            return jax.block_until_ready(payload)
+
+        if self.watchdog is None:
+            return work()
+        box = {}
+
+        def runner():
+            try:
+                box["ok"] = work()
+            except BaseException as exc:  # surfaced on the waiting side
+                box["err"] = exc
+
+        t = threading.Thread(target=runner, name="bg-frame-await", daemon=True)
+        t.start()
+        t.join(self.watchdog)
+        if t.is_alive():
+            with self._lock:
+                self._watchdog_trips += 1
+            raise EngineTimeout(self.watchdog, uids=[r.uid for r in batch])
+        if "err" in box:
+            raise box["err"]
+        return box["ok"]
+
+    def _quarantine(self, sids) -> None:
+        """Reset the given streams' temporal carries to cold (per-stream
+        quarantine), counting actual resets."""
+        if self.packer is None or not sids:
+            return
+        n = 0
+        with self._packer_lock:
+            for sid in sids:
+                if self.packer.quarantine(sid):
+                    n += 1
+        if n:
+            with self._lock:
+                self._carry_resets += n
+
+    def _resolve(self, batch, outs, guard, out_ok, carry_ok, didx=None) -> None:
+        """Post-completion guard pass + future resolution for one batch."""
+        # carry quarantine: exactly the streams whose carry went bad
+        if carry_ok is not None and len(guard.carry_sids):
+            flags = np.asarray(carry_ok)
+            self._quarantine(
+                [s for s, ok in zip(guard.carry_sids, flags) if not ok]
+            )
+        errors = None
+        if self.output_guard and out_ok is not None:
+            flags = np.asarray(out_ok)
+            pos = (
+                {sid: i for i, sid in enumerate(guard.order)}
+                if guard.order is not None
+                else None
+            )
+            errors = []
+            for j, req in enumerate(batch):
+                row = j if pos is None else pos[req.stream_id]
+                errors.append(
+                    None
+                    if bool(flags[row])
+                    else NonFiniteOutput(req.uid, stream_id=req.stream_id)
+                )
+            if not any(e is not None for e in errors):
+                errors = None
+        self._finish(batch, outs=outs, errors=errors)
+        # injected carry corruption/loss lands after a healthy completion —
+        # the poison the *next* pack's guard flags must catch
+        inj = self.fault_injector
+        if inj is not None and self.packer is not None and didx is not None:
+            with self._packer_lock:
+                inj.apply_carry_faults(self.packer.sessions, didx)
+
+    def _on_completion_failure(self, batch, guard, rung, exc) -> None:
+        """A launched batch failed to realize (device error, watchdog trip).
+
+        Charges the dispatching rung's breaker. Video packs are stateful —
+        their futures fail structurally and their streams' carries are
+        quarantined *precisely*: a short hookless re-await of the lazy
+        carry-health flags distinguishes "computation fine, completion was
+        held up" (reset only genuinely bad rows — zero for a pure hang)
+        from "carries never realized" (reset every stream in the pack; the
+        safe default for a truly wedged device). Stateless batches instead
+        get one synchronous guarded redispatch — retry + ladder + watchdog
+        — so a transient completion failure still serves results.
+        """
+        self._guard.record_remote_failure(rung)
+        if self.packer is not None:
+            suspects = list(guard.carry_sids)
+            if suspects and guard.carry_ok is not None:
+                try:
+                    flags = np.asarray(
+                        self._await(guard.carry_ok, None, batch, with_hook=False)
+                    )
+                    suspects = [
+                        s for s, ok in zip(guard.carry_sids, flags) if not ok
+                    ]
+                except Exception:
+                    pass  # flags unrealizable -> reset the whole pack
+            self._quarantine(suspects)
+            self._finish(batch, error=exc)
+            return
+        try:
+
+            def attempt(plan):
+                inj = self.fault_injector
+                didx = inj.on_dispatch(plan.backend) if inj else None
+                outs, guard2 = self._launch_with(plan, batch)
+                ready = self._await((outs, guard2.out_ok), didx, batch)
+                return ready[0], guard2, ready[1]
+
+            (outs, guard2, out_ok), _rung = self._guard.call(attempt)
+        except Exception as exc2:
+            self._finish(batch, error=exc2)
+            return
+        self._resolve(batch, outs, guard2, out_ok, None)
+
+    def _finish(self, batch, outs=None, error=None, errors=None):
         now = time.monotonic()
         # Resolve futures BEFORE announcing completion: flush() returning must
         # imply every future is done. A client-cancelled future is skipped
         # (set_running_or_notify_cancel returns False and a RUNNING future can
         # no longer be cancelled, so the set below cannot race).
+        per_req = errors if errors is not None else [error] * len(batch)
         for i, req in enumerate(batch):
             if not req.future.set_running_or_notify_cancel():
                 continue
-            if error is not None:
-                req.future.set_exception(error)
+            if per_req[i] is not None:
+                req.future.set_exception(per_req[i])
             else:
                 req.future.set_result(outs[i])
         with self._lock:
-            for req in batch:
+            for i, req in enumerate(batch):
                 self._latencies.append(now - req.t_submit)
                 if req.deadline is not None and now > req.deadline:
                     self._deadline_misses += 1
-                self._completed += error is None
+                self._completed += per_req[i] is None
+                self._failed += per_req[i] is not None
             self._outstanding -= len(batch)
             self._drained.notify_all()
 
     def _complete_loop(self):
         while True:
-            item = self._inflight.get()
+            try:
+                item = self._inflight.get(timeout=0.2)
+            except queue.Empty:
+                # stop-aware fallback: when shutdown raced the sentinel out
+                # of the in-flight queue (a full queue at close), exit once
+                # the dispatcher is gone and nothing is left to realize
+                if self._stop.is_set() and not self._dispatcher.is_alive():
+                    return
+                continue
             if item is _SENTINEL:
                 return
-            batch, outs = item
+            batch, outs, guard, rung, didx = item
             try:
-                outs = jax.block_until_ready(outs)
+                outs, out_ok, carry_ok = self._await(
+                    (outs, guard.out_ok, guard.carry_ok), didx, batch
+                )
             except Exception as exc:
-                self._finish(batch, error=exc)
+                self._on_completion_failure(batch, guard, rung, exc)
                 continue
-            self._finish(batch, outs=outs)
+            self._resolve(batch, outs, guard, out_ok, carry_ok, didx=didx)

@@ -19,6 +19,16 @@ without the two-dispatch cold/warm split this packer needed while the warm
 path lived on the staged jnp pipeline. A pack whose streams are all cold
 (no session holds a carry, every alpha is 0) short-circuits to the carry-free
 per-frame path and never materializes temporal state at all.
+
+Reliability (PR 6): :meth:`MultiStreamPacker.pack_guarded` is ``pack`` plus
+a :class:`repro.reliability.DispatchGuard` — lazy per-row ``jnp.isfinite``
+flags over the pack's outputs and advanced carries, launched with the
+dispatch and realized by the engine at completion. A bad carry row is the
+EMA-poisoning signature (one NaN frame contaminates the stream's history
+forever); :meth:`MultiStreamPacker.quarantine` is the cure — reset the
+stream's carry to cold so the next pack re-warms it through the standard
+first-frame effective-alpha-0 path. ``pack_guarded(plan=...)`` dispatches an
+alternate plan (a fallback-ladder rung) without rebinding the packer.
 """
 from __future__ import annotations
 
@@ -103,6 +113,7 @@ class MultiStreamPacker:
             )
         self.plan = plan
         self.sessions: Dict[Hashable, StreamSession] = {}
+        self.carry_resets = 0  # lifetime count of quarantined carries
 
     @property
     def cfg(self) -> BGConfig:
@@ -122,8 +133,23 @@ class MultiStreamPacker:
     def live(self) -> int:
         return len(self.sessions)
 
+    def quarantine(self, sid: Hashable) -> bool:
+        """Reset one stream's temporal carry to cold (the PR-3 machinery:
+        ``carry=None`` forces effective alpha 0 on the stream's next pack,
+        i.e. a standard first-frame warm-up). The cure for a poisoned carry
+        — a NaN frame blended into the EMA otherwise contaminates every
+        later frame of the stream. Returns True when a carry was actually
+        dropped (and counts it in ``carry_resets``); an already-cold or
+        unknown stream is a no-op."""
+        sess = self.sessions.get(sid)
+        if sess is None or sess.carry is None:
+            return False
+        sess.carry = None
+        self.carry_resets += 1
+        return True
+
     # ---------------------------------------------------------------- pack
-    def pack(self, frames: Dict[Hashable, jnp.ndarray]) -> Dict[Hashable, jnp.ndarray]:
+    def pack(self, frames: Dict[Hashable, jnp.ndarray], *, plan=None) -> Dict[Hashable, jnp.ndarray]:
         """Denoise one frame from each given stream in one batched dispatch.
 
         ``frames`` maps stream id -> (h, w) frame; every id must be open and
@@ -132,10 +158,41 @@ class MultiStreamPacker:
         the next micro-batch). All frames of a pack share one (h, w): the
         batch axis of the fused kernel (and the stacked carry) needs a single
         static frame shape. Returns stream id -> denoised frame and advances
-        each stream's carry/counter.
+        each stream's carry/counter. ``plan=`` dispatches an alternate base
+        plan (a fallback-ladder rung) for this pack only.
         """
+        results, _ = self.pack_guarded(frames, plan=plan)
+        return results
+
+    def pack_guarded(
+        self,
+        frames: Dict[Hashable, jnp.ndarray],
+        *,
+        plan=None,
+        carry_limit: Optional[float] = None,
+    ):
+        """:meth:`pack` plus a ``DispatchGuard`` of lazy finite-flags.
+
+        Returns ``(results, guard)``: ``guard.out_ok`` holds per-row output
+        finite flags in ``guard.order`` (the pack's sorted stream-id order)
+        and ``guard.carry_ok`` per-stream carry health flags (finite and
+        ``|carry| < carry_limit``) for ``guard.carry_sids`` — the streams
+        whose temporal carry advanced this pack. The flags are tiny
+        ``jnp.isfinite`` reductions launched with the dispatch (they ride
+        the same async dataflow; nothing here synchronizes) — the engine
+        realizes them with the outputs and quarantines bad carries.
+        """
+        from repro.reliability.guards import (
+            DEFAULT_CARRY_LIMIT,
+            DispatchGuard,
+            carry_ok_rows,
+            finite_rows,
+        )
+
+        if carry_limit is None:
+            carry_limit = DEFAULT_CARRY_LIMIT
         if not frames:
-            return {}
+            return {}, DispatchGuard()
         missing = [s for s in frames if s not in self.sessions]
         if missing:
             raise KeyError(f"streams not open: {missing!r}")
@@ -152,7 +209,10 @@ class MultiStreamPacker:
         # auto-tuned/legacy-default value clamped to the per-device shard,
         # exactly the clamp the kernel would apply — an explicit plan
         # decision instead of an implicit kernel one)
-        plan = self.plan.with_tile(self.plan.tile_for(len(sids)))
+        base = self.plan if plan is None else plan
+        plan = base.with_tile(base.tile_for(len(sids)))
+        carry_sids = ()
+        carry_ok = None
 
         if not warm:
             # all-cold pack: the carry-free per-frame fused path — nothing
@@ -180,12 +240,21 @@ class MultiStreamPacker:
             out, new_carry = temporal_denoise(
                 batch, carry=carry, alpha=alpha, plan=plan
             )
+            warm_rows = [i for i, s in enumerate(sids) if sessions[s].alpha > 0.0]
             for i, s in enumerate(sids):
                 results[s] = out[i]
                 if sessions[s].alpha > 0.0:
                     # cold sessions stay carry-free (the per-frame path
                     # needs no history); warm sessions advance their EMA
                     sessions[s].carry = new_carry[i]
+            carry_sids = tuple(sids[i] for i in warm_rows)
+            carry_ok = carry_ok_rows(new_carry[jnp.asarray(warm_rows)], carry_limit)
         for s in sids:
             sessions[s].frames_seen += 1
-        return results
+        guard = DispatchGuard(
+            out_ok=finite_rows(out),
+            order=tuple(sids),
+            carry_sids=carry_sids,
+            carry_ok=carry_ok,
+        )
+        return results, guard
