@@ -243,7 +243,12 @@ def chaos_soak(
 
 def run(quick: bool = False):
     rounds = 6 if quick else 12
-    res = chaos_soak(rounds=rounds, watchdog_ms=600.0, hang_delay_s=2.0)
+    # reps=3: the gated recovery/clean ratio compares two best-of-reps
+    # wall-clock windows of tens of ms each; with only two windows a single
+    # scheduler or GC pause in the unlucky phase lands the ratio just under
+    # its 0.8 floor on a loaded runner
+    res = chaos_soak(rounds=rounds, watchdog_ms=600.0, hang_delay_s=2.0,
+                     reps=3)
     n = res["frames"]
     tag = f"s{res['n_streams']}_r{rounds}"
     clean_ok = res["all_resolved"] and res["corrupt_served"] == 0

@@ -1,0 +1,217 @@
+"""Measured plan search: grid-search the plan candidates per workload, emit
+the model-predicted-vs-measured-best table, and record winners into the
+persistent plan cache.
+
+The sweep-then-generate-tables harness for the plan layer (ROADMAP item 2):
+for each ``(h, w, r, b, temporal)`` workload it times every legal
+``backend x batch_tile`` candidate that :func:`repro.plan.plan_for` would
+rank, compares the roofline model's pick (``plan_cost``) against the
+measured best, and records the measured winner into
+:mod:`repro.plan_cache` — after which ``plan_for`` resolves that workload
+from the cache (verified here: the read-back row fails the run if the
+cache path is dead). Artifacts:
+
+  * ``results/plan_sweep/sweep_<ts>.json`` — the raw per-candidate records,
+  * ``results/plan_sweep/sweep_<ts>.md`` — the markdown table
+    (``repro.launch.roofline.render_plan_sweep_table``; also printed as
+    ``#``-prefixed lines so the CSV stream stays parseable),
+  * ``plan_sweep/*`` snapshot rows with full plan provenance.
+
+``model_regret`` rows are informational (no ``floor=``): the model's job is
+ranking, and regret ~1.0x means it found the true winner; the *gated*
+tuned-vs-default floor lives in ``bench_bg_tables``. Sweep configs use
+``sigma_r=65`` so their cache keys can never collide with the test-suite
+geometries (``sigma_r=50``/``70``) — a sweep run must not change what
+``tests/test_plan.py`` asserts ``plan_for`` returns.
+"""
+import json
+import os
+import time
+
+import jax
+
+from repro.core import BGConfig, add_gaussian_noise, synthetic_batch
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TEMPORAL_ALPHA = 0.6
+
+
+def _workloads(quick: bool):
+    """(h, w, cfg, b, temporal) sweep points. Quick = the CI smoke pair."""
+    mk = lambda r: BGConfig(r=r, sigma_s=4.0, sigma_r=65.0)
+    pts = [
+        (48, 64, mk(4), 8, False),
+        (48, 64, mk(8), 8, True),
+    ]
+    if not quick:
+        pts += [
+            (128, 192, mk(8), 16, False),
+            (96, 144, mk(12), 8, True),
+            (270, 480, mk(12), 4, False),
+        ]
+    return pts
+
+
+def _candidates(cfg, h, w, b, temporal):
+    """The same legal candidate grid plan_for's model ranks (single-device)."""
+    from repro.plan import BGPlan, auto_batch_tile
+
+    backends = ("fused",) if temporal else ("fused", "fused_streamed")
+    plans = []
+    for be in backends:
+        cap = auto_batch_tile(
+            cfg, h, w, b,
+            stream_input=be == "fused_streamed",
+            temporal=temporal,
+        )
+        tiles = sorted({t for t in (1, 2, 4, 8, 16, 32, 64) if t < cap}
+                       | {cap})
+        plans.extend(
+            BGPlan(cfg=cfg, backend=be, temporal=temporal, batch_tile=t)
+            for t in tiles
+        )
+    return plans
+
+
+def _time_plan(plan, frames, carry, alpha, reps):
+    if plan.temporal:
+        fn = lambda: jax.block_until_ready(
+            plan(frames, carry=carry, alpha=alpha)
+        )
+    else:
+        fn = lambda: jax.block_until_ready(plan(frames))
+    fn()  # warm-up / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False):
+    from repro.launch.roofline import render_plan_sweep_table
+    from repro.plan import plan_cost, plan_for
+    from repro.plan_cache import get_default_cache, workload_key
+
+    reps = 3 if quick else 5
+    cache = get_default_cache()
+    rows, records = [], []
+    worst_regret = 1.0
+    for h, w, cfg, b, temporal in _workloads(quick):
+        frames = add_gaussian_noise(synthetic_batch(b, h, w, seed=0), 30.0,
+                                    seed=1)
+        plans = _candidates(cfg, h, w, b, temporal)
+        carry = alpha = None
+        if temporal:
+            # a real warm carry shared by every candidate (carry geometry
+            # depends only on cfg, not on the dispatch tile)
+            import numpy as np
+
+            from repro.video import temporal_denoise
+
+            alpha = jax.numpy.asarray(
+                np.full((b,), TEMPORAL_ALPHA, np.float32)
+            )
+            _, carry = temporal_denoise(
+                frames, alpha=TEMPORAL_ALPHA, plan=plans[-1]
+            )
+        cands = []
+        for p in plans:
+            cands.append(
+                {
+                    "plan": p.to_json(),
+                    "plan_hash": p.plan_hash(),
+                    "model_us": plan_cost(p, h, w, b) * 1e6,
+                    "measured_us": _time_plan(p, frames, carry, alpha, reps)
+                    * 1e6,
+                }
+            )
+        best_i = min(range(len(cands)),
+                     key=lambda i: cands[i]["measured_us"])
+        model_i = min(range(len(cands)), key=lambda i: cands[i]["model_us"])
+        regret = cands[model_i]["measured_us"] / cands[best_i]["measured_us"]
+        worst_regret = max(worst_regret, regret)
+
+        winner = plans[best_i]
+        key = workload_key(cfg, h, w, b, temporal, 1)
+        cache.record(
+            key,
+            winner,
+            measured_us=cands[best_i]["measured_us"],
+            model_us=cands[best_i]["model_us"],
+        )
+        # read-back through the real resolution path: plan_for must now
+        # resolve this workload from the cache (provenance == "cache")
+        resolved = plan_for(cfg, h, w, n_frames=b, temporal=temporal,
+                            sharded=False, cache=cache)
+        if resolved.provenance != "cache" or (
+            resolved.plan_hash() != winner.plan_hash()
+        ):
+            raise AssertionError(
+                f"plan cache read-back failed: recorded "
+                f"{winner.describe()} ({winner.plan_hash()}), plan_for "
+                f"resolved {resolved.describe()} ({resolved.plan_hash()})"
+            )
+
+        tag = f"{h}x{w}_r{cfg.r}_b{b}" + ("_temporal" if temporal else "")
+        rows.append(
+            (
+                f"plan_sweep/{tag}/measured_best",
+                cands[best_i]["measured_us"],
+                f"plan={resolved.describe()} "
+                f"candidates={len(cands)} cache_key_recorded=1",
+            )
+        )
+        rows.append(
+            (
+                f"plan_sweep/{tag}/model_pick",
+                cands[model_i]["measured_us"],
+                f"backend={plans[model_i].backend} "
+                f"bt={plans[model_i].batch_tile} src=model "
+                f"predicted={cands[model_i]['model_us']:.1f}us "
+                f"regret={regret:.2f}x",
+            )
+        )
+        records.append(
+            {
+                "workload": tag,
+                "h": h,
+                "w": w,
+                "r": cfg.r,
+                "b": b,
+                "temporal": temporal,
+                "candidates": cands,
+                "model_pick": model_i,
+                "measured_best": best_i,
+                "regret": regret,
+                "cache_key": key,
+            }
+        )
+
+    # artifacts: raw records + the paper-style model-vs-measured table
+    out_dir = os.path.join(REPO_ROOT, "results", "plan_sweep")
+    os.makedirs(out_dir, exist_ok=True)
+    ts = time.strftime("%Y%m%d_%H%M%S")
+    json_path = os.path.join(out_dir, f"sweep_{ts}.json")
+    with open(json_path, "w") as f:
+        json.dump(records, f, indent=1)
+    table = render_plan_sweep_table(records)
+    md_path = os.path.join(out_dir, f"sweep_{ts}.md")
+    with open(md_path, "w") as f:
+        f.write("## Plan sweep: model-predicted vs measured-best\n\n"
+                + table + "\n")
+    for line in table.splitlines():
+        print(f"# {line}", flush=True)
+    rows.append(
+        (
+            "plan_sweep/model_regret_worst",
+            worst_regret,
+            f"measured(model pick)/measured(best) across "
+            f"{len(records)} workloads; 1.00 = model found every true "
+            f"winner (informational) — table: "
+            f"{os.path.relpath(md_path, REPO_ROOT)} cache: {cache.path}",
+        )
+    )
+    return rows

@@ -165,8 +165,17 @@ def run(quick: bool = False):
     ]
 
     # the temporal multi-stream path (in-kernel fused grid-EMA) through the
-    # same async front — the flicker-suppressing video service mode
-    packer = MultiStreamPacker(cfg, batch_tile=n_streams)
+    # same async front — the flicker-suppressing video service mode. The
+    # packer takes the tuned plan (what the video service does post-PR-5);
+    # its describe() string lands in the row so the dispatch geometry and
+    # its provenance (cache/model/explicit) are attributable in snapshots.
+    from repro.plan import plan_for
+
+    temporal_plan = plan_for(
+        cfg, h, w, n_frames=n_streams, temporal=True, sharded=False,
+        cache=False,
+    )
+    packer = MultiStreamPacker(plan=temporal_plan)
     for s in range(n_streams):
         packer.open(s, alpha=TEMPORAL_ALPHA)
     _run_async(cfg, arrivals, n_streams, packer=packer)  # warm-up
@@ -176,7 +185,8 @@ def run(quick: bool = False):
             f"bg_video/async_temporal_a{TEMPORAL_ALPHA:g}_{tag}",
             dt / n * 1e6,
             f"fps={n / dt:.0f} p50={stats.latency_ms_p50:.1f}ms "
-            f"p99={stats.latency_ms_p99:.1f}ms (fused in-kernel grid-EMA)",
+            f"p99={stats.latency_ms_p99:.1f}ms (fused in-kernel grid-EMA) "
+            f"plan={temporal_plan.describe()}",
         )
     )
     # serving telemetry -> the BENCH_<ts>.json trajectory (the EngineStats
@@ -252,7 +262,9 @@ def _temporal_gate_setup(quick: bool):
         jax.block_until_ready(staged_plan(frames, carry=carry, alpha=alpha))
 
     return {"n": n, "tag": f"warm{n}_{h}x{w}_r{r}", "hwr": (h, w, r),
-            "fused": fused, "staged": staged}
+            "fused": fused, "staged": staged,
+            "fused_desc": fused_plan.describe(),
+            "staged_desc": staged_plan.describe()}
 
 
 def _temporal_time_window(gate, reps=TEMPORAL_REPS):
@@ -289,12 +301,14 @@ def _temporal_rows(gate, tf, ts):
         (
             f"bg_video/temporal_fused_{tag}",
             min(tf) / n * 1e6,
-            f"fps={n / min(tf):.0f} one-kernel in-VMEM grid-EMA warm path",
+            f"fps={n / min(tf):.0f} one-kernel in-VMEM grid-EMA warm path "
+            f"plan={gate['fused_desc']}",
         ),
         (
             f"bg_video/temporal_staged_{tag}",
             min(ts) / n * 1e6,
-            f"fps={n / min(ts):.0f} staged create->blur->EMA->slice oracle",
+            f"fps={n / min(ts):.0f} staged create->blur->EMA->slice oracle "
+            f"plan={gate['staged_desc']}",
         ),
         (
             "ratio/bg_temporal_fused_vs_staged",

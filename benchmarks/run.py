@@ -144,7 +144,8 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: tables,quality,kernels,throughput,sharded,video,chaos,lm,roofline",
+        help="comma list: tables,quality,kernels,throughput,sharded,video,"
+        "chaos,plan_sweep,lm,roofline",
     )
     ap.add_argument(
         "--no-snapshot",
@@ -161,6 +162,7 @@ def main() -> None:
         bench_bg_tables,
         bench_bg_throughput,
         bench_lm,
+        bench_plan_sweep,
         bench_roofline,
         bench_video_stream,
     )
@@ -173,6 +175,7 @@ def main() -> None:
         "sharded": bench_bg_sharded,
         "video": bench_video_stream,
         "chaos": bench_bg_chaos,
+        "plan_sweep": bench_plan_sweep,
         "lm": bench_lm,
         "roofline": bench_roofline,
     }

@@ -1,6 +1,7 @@
-"""Roofline report generator: results/dryrun/*.json -> markdown tables.
+"""Roofline report generators: dryrun cells and plan-sweep records -> markdown.
 
     PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun
+    PYTHONPATH=src python -m repro.launch.roofline --plan-sweep results/plan_sweep/sweep_<ts>.json
 """
 from __future__ import annotations
 
@@ -10,7 +11,12 @@ import json
 import os
 from collections import defaultdict
 
-__all__ = ["load_cells", "render_roofline_table", "render_dryrun_table"]
+__all__ = [
+    "load_cells",
+    "render_roofline_table",
+    "render_dryrun_table",
+    "render_plan_sweep_table",
+]
 
 
 def load_cells(directory: str):
@@ -71,11 +77,54 @@ def render_roofline_table(cells, mesh: str = "16x16") -> str:
     return "\n".join(out)
 
 
+def _plan_label(plan: dict) -> str:
+    bt = plan.get("batch_tile")
+    return f"{plan.get('backend', '?')}/bt{bt if bt is not None else 'auto'}"
+
+
+def render_plan_sweep_table(records) -> str:
+    """The paper-style model-predicted-vs-measured-best plan table.
+
+    ``records`` is the list ``benchmarks/bench_plan_sweep`` emits: one dict
+    per workload with ``workload`` (label), ``candidates`` (each with
+    ``plan`` = a ``BGPlan.to_json`` payload, ``model_us``, ``measured_us``),
+    ``model_pick`` / ``measured_best`` (candidate indices), and ``regret``
+    (measured time of the model's pick / measured best — 1.00 means the
+    roofline model found the true winner).
+    """
+    out = [
+        "| workload | candidates | model pick | pred us | measured best | "
+        "best us | regret |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        cands = r["candidates"]
+        mp, mb = cands[r["model_pick"]], cands[r["measured_best"]]
+        out.append(
+            f"| {r['workload']} | {len(cands)} | {_plan_label(mp['plan'])} | "
+            f"{mp['model_us']:.1f} | {_plan_label(mb['plan'])} | "
+            f"{mb['measured_us']:.1f} | {r['regret']:.2f}x |"
+        )
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument(
+        "--plan-sweep",
+        default=None,
+        metavar="JSON",
+        help="render the model-vs-measured table from a bench_plan_sweep "
+        "records file instead of the dryrun report",
+    )
     args = ap.parse_args()
+    if args.plan_sweep:
+        records = json.load(open(args.plan_sweep))
+        print("## Plan sweep: model-predicted vs measured-best\n")
+        print(render_plan_sweep_table(records))
+        return
     cells = load_cells(args.dir)
     print("## Dry-run\n")
     print(render_dryrun_table(cells))

@@ -34,7 +34,7 @@ def serve_frames(args) -> None:
     print(
         f"[serve] frame engine: {jax.device_count()} device(s), "
         f"micro-batch {eng.max_batch} (mesh-divisible by {eng.n_devices}), "
-        f"plan backend={plan.backend} batch_tile={plan.batch_tile}"
+        f"plan[{plan.describe()}]"
     )
     clean = synthetic_batch(args.frames, h, w, seed=0)
     noisy = add_gaussian_noise(clean, 30.0, seed=1)
@@ -105,8 +105,9 @@ def serve_video(args) -> None:
     # streams produce, so the plan must never be the input-streamed backend
     # (which cannot carry the grid EMA; the packer rejects it).
     plan = plan_for(cfg, h, w, n_frames=n_streams, temporal=True)
-    print(f"[serve] plan: backend={plan.backend} batch_tile={plan.batch_tile} "
-          f"mesh={plan.mesh_size} device(s)")
+    # describe() includes provenance: whether the measured plan cache, the
+    # roofline model, or a pinned kwarg chose this dispatch geometry
+    print(f"[serve] plan[{plan.describe()}]")
 
     # warm-up compile on the steady-state pack shape through a throwaway
     # engine: the jit caches are global, but the serving engine's telemetry

@@ -79,6 +79,45 @@ budget" rule from the PR-2 notes, now code). The temporal path never
 streams input (the carry operand claims the manual-DMA slot budget), which
 :class:`BGPlan` enforces at construction.
 
+The roofline latency model (how ``plan_for`` ranks candidates)
+--------------------------------------------------------------
+The VMEM budget above decides which plans are *legal*; :func:`plan_cost`
+predicts which legal plan is *fastest*. Per candidate it charges, against
+the per-chip peaks in ``repro.launch.hlo_analysis`` (``PEAK_FLOPS``,
+``HBM_BW``):
+
+  compute_s   FLOPs of the GC/GF/TI contractions per stripe step, summed
+              over the padded dispatch (``ceil(b_dev/bt) * (ceil(h/r)+2)``
+              steps) — the GC one-hot matmul ``4*r*gz*gy*w`` and the TI
+              slice contraction ``8*gz*gy*w`` per frame-step dominate.
+  memory_s    HBM bytes moved: input blocks (img+msk on the default path,
+              img only when streamed — the mask never leaves the kernel),
+              the output write-back, and for temporal plans the carry
+              read+write (``2 * 4 * gx*gy*gz*2`` bytes per frame).
+  overhead_s  ``DISPATCH_OVERHEAD_S`` per dispatch + ``STEP_OVERHEAD_S``
+              per grid step (why bigger tiles win: fewer steps) +
+              ``STREAM_DMA_OVERHEAD_S`` per frame-step on the manual-DMA
+              path (why tiny frames don't stream: the saved mask bytes,
+              ``4*r*w / HBM_BW``, must outweigh the DMA issue cost — the
+              break-even sits at ``r*w ~ 16k``, reproducing the PR-5
+              256 KiB ``auto_stream_input`` rule as a *derived* quantity).
+
+``plan_cost`` sums the three terms (the stripe pipeline serializes DMA
+issue and compute within a step in interpret mode; the sum is the
+conservative no-overlap bound) — :func:`plan_cost_breakdown` also reports
+the classical ``max()`` roofline bound. The model is structural, not
+calibrated per host: its job is *ranking* candidates, and measured truth
+lives in the plan cache. :func:`plan_cost_hlo` cross-checks it by lowering
+a plan's real executable and running the optimized HLO through
+``launch.hlo_cost.analyze_hlo`` / ``launch.hlo_analysis.roofline_terms``.
+
+Plan resolution order: ``plan_for`` consults the on-disk measured-plan
+cache (:mod:`repro.plan_cache`, written by ``benchmarks/bench_plan_sweep``)
+first, then ranks the legal ``backend x batch_tile`` candidates by
+``plan_cost``; pinned kwargs skip both. ``BGPlan.provenance`` records
+which route produced the plan (``"cache"``/``"model"``/``"explicit"``/
+``"default"``) so bench rows and serving logs stay attributable.
+
 Legacy kwargs (``use_kernels=``, ``sharded=``, ``stream_input=``, ...) on the
 public entry points still work: each entry point routes them into an
 equivalent ``BGPlan`` (batch_tile ``None`` = the kernel's ``DEFAULT_BATCH_TILE``,
@@ -88,6 +127,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import json
 import warnings
 from typing import Optional, Tuple
 
@@ -107,6 +148,9 @@ from repro.core.bilateral_grid import (
 __all__ = [
     "BGPlan",
     "plan_for",
+    "plan_cost",
+    "plan_cost_breakdown",
+    "plan_cost_hlo",
     "auto_batch_tile",
     "auto_stream_input",
     "step_bytes_per_frame",
@@ -114,6 +158,9 @@ __all__ = [
     "VMEM_STEP_BUDGET_BYTES",
     "STREAM_INPUT_THRESHOLD_BYTES",
     "MAX_AUTO_TILE",
+    "DISPATCH_OVERHEAD_S",
+    "STEP_OVERHEAD_S",
+    "STREAM_DMA_OVERHEAD_S",
 ]
 
 BACKENDS = ("reference", "streaming", "staged", "fused", "fused_streamed")
@@ -131,24 +178,38 @@ VMEM_STEP_BUDGET_BYTES = 8 * 2**20
 STREAM_INPUT_THRESHOLD_BYTES = 256 * 2**10
 MAX_AUTO_TILE = 64
 
+# Latency-model overhead constants (module docstring, "roofline latency
+# model"). Structural, not per-host-calibrated: they set the *break-even
+# points* of the ranking — STREAM_DMA_OVERHEAD_S puts the stream-vs-default
+# crossover at r*w ~ 16k (4*r*w/HBM_BW saved bytes vs the DMA issue cost,
+# matching the PR-5 256 KiB rule), STEP_OVERHEAD_S makes fewer-bigger tiles
+# win whenever VMEM allows. Measured truth belongs in the plan cache.
+DISPATCH_OVERHEAD_S = 30e-6
+STEP_OVERHEAD_S = 2e-6
+STREAM_DMA_OVERHEAD_S = 8e-8
+
 
 # ---------------------------------------------------------------- heuristics
 def step_bytes_per_frame(
-    cfg: BGConfig, h: int, w: int, *, stream_input: bool = False
+    cfg: BGConfig, h: int, w: int, *, stream_input: bool = False,
+    temporal: bool = False,
 ) -> int:
     """Fused-kernel per-grid-step VMEM bytes for ONE frame of the batch tile.
 
     The linear-in-``bt`` part of the step footprint (io blocks + scratch +
     dominant temporaries); constants (column one-hots, taps) are tile-
-    independent and excluded. See the module docstring for the term-by-term
-    derivation.
+    independent and excluded. Temporal plans additionally hold the
+    double-buffered carry in/out blocks (``2 * 2 * (2*gz*gy)`` f32 elements
+    per frame — one ``(gy, gz, 2)`` carry plane each way). See the module
+    docstring for the term-by-term derivation.
     """
     r = cfg.r
     _, gy, gz = grid_shape(h, w, cfg)
     io = (4 if stream_input else 6) * r * w
     scratch = 7 * gz * gy + 2 * r * w
     temporaries = 5 * r * gz * w
-    return 4 * (io + scratch + temporaries)
+    carry = 8 * gz * gy if temporal else 0
+    return 4 * (io + scratch + temporaries + carry)
 
 
 def auto_stream_input(cfg: BGConfig, h: int, w: int) -> bool:
@@ -165,6 +226,7 @@ def auto_batch_tile(
     *,
     stream_input: bool = False,
     mesh_size: int = 1,
+    temporal: bool = False,
 ) -> int:
     """Largest batch tile whose per-step working set fits the VMEM budget.
 
@@ -172,12 +234,125 @@ def auto_batch_tile(
     per-device share ``ceil(n_frames / mesh_size)`` (a larger tile would be
     pure padding on every device).
     """
-    per = step_bytes_per_frame(cfg, h, w, stream_input=stream_input)
+    per = step_bytes_per_frame(
+        cfg, h, w, stream_input=stream_input, temporal=temporal
+    )
     bt = max(1, VMEM_STEP_BUDGET_BYTES // per)
     bt = min(bt, MAX_AUTO_TILE)
     if n_frames is not None:
         bt = min(bt, -(-int(n_frames) // max(1, mesh_size)))
     return int(max(1, bt))
+
+
+# --------------------------------------------------------- roofline cost model
+def plan_cost_breakdown(plan: "BGPlan", h: int, w: int,
+                        n_frames: Optional[int] = None) -> dict:
+    """Term-by-term roofline latency estimate for dispatching ``plan`` on an
+    ``(n_frames, h, w)`` batch — the model behind :func:`plan_cost` (see the
+    module docstring for the derivation). All device-rate terms use the
+    per-chip peaks from ``repro.launch.hlo_analysis`` and describe ONE mesh
+    device's shard (devices run the shard in parallel).
+
+    Returns a dict: ``flops``, ``hbm_bytes``, ``steps``, ``compute_s``,
+    ``memory_s``, ``overhead_s``, ``bound_s`` (the classical
+    ``max(compute, memory)`` roofline bound), and ``total_s`` (the
+    no-overlap sum that ranks candidates).
+    """
+    from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+
+    cfg = plan.cfg
+    r = cfg.r
+    gx, gy, gz = grid_shape(h, w, cfg)
+    b = 1 if n_frames is None else max(1, int(n_frames))
+    b_dev = -(-b // plan.mesh_size)  # per-device shard
+
+    if plan.backend in _FUSED_BACKENDS:
+        streamed = plan.backend == "fused_streamed"
+        bt = plan.tile_for(b)  # plan tile (or DEFAULT_BATCH_TILE) clamped
+        nb = -(-b_dev // bt)
+        b_pad = nb * bt
+        # grid steps: ceil(h/r) stripes + 2 macro-pipeline warm-up/drain
+        # stages, + 1 extra TI drain step for temporal when h % r == 0
+        n_grid = -(-h // r) + 2 + (1 if plan.temporal and h % r == 0 else 0)
+        steps = nb * n_grid
+        # FLOPs per frame-step: GC one-hot matmul + TI slice contraction
+        # dominate; elementwise one-hot/weight build and the GF blur trail
+        per_frame_step_flops = (
+            4 * r * gz * gy * w      # GC einsum "bcizw,wg->bcizg"
+            + 8 * gz * gy * w        # TI einsum "pbzg,cwg->pbzcw"
+            + 10 * r * gz * w        # one-hot z-stack + weights + blend
+            + 30 * gz * gy           # separable 3-tap GF blur, 2 channels
+        )
+        flops = b_pad * n_grid * per_frame_step_flops
+        # HBM traffic: img (+ msk on the default path) in, out back; the
+        # grid itself never leaves VMEM on the fused path
+        frame_bytes = 4 * r * n_grid * w
+        hbm = b_pad * frame_bytes * (2 if streamed else 3)
+        if plan.temporal:
+            hbm += 2 * 4 * b_pad * gx * gy * gz * 2  # carry read + write
+        overhead = DISPATCH_OVERHEAD_S + steps * STEP_OVERHEAD_S
+        if streamed:
+            overhead += b_pad * n_grid * STREAM_DMA_OVERHEAD_S
+    else:
+        # Oracle backends (reference / streaming / staged): rough structural
+        # charges — enough to rank them behind a legal fused plan, never
+        # used to split hairs between oracles.
+        grid_elems = gx * gy * gz * 2
+        flops = b_dev * (100 * h * w + 60 * grid_elems)
+        hbm = 4 * b_dev * (2 * h * w + 10 * grid_elems)
+        steps = b_dev * (-(-h // r)) if plan.backend == "streaming" else b_dev
+        overhead = DISPATCH_OVERHEAD_S * (
+            3 if plan.backend == "staged" else 1
+        ) + steps * STEP_OVERHEAD_S
+        if plan.temporal:
+            hbm += 2 * 4 * b_dev * grid_elems
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    return {
+        "flops": float(flops),
+        "hbm_bytes": float(hbm),
+        "steps": int(steps),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "overhead_s": overhead,
+        "bound_s": max(compute_s, memory_s),
+        "total_s": compute_s + memory_s + overhead,
+    }
+
+
+def plan_cost(plan: "BGPlan", h: int, w: int,
+              n_frames: Optional[int] = None) -> float:
+    """Predicted seconds to dispatch ``plan`` on ``(n_frames, h, w)`` frames
+    (the no-overlap roofline sum; see :func:`plan_cost_breakdown`). This is
+    the ranking key :func:`plan_for` minimizes over legal candidates."""
+    return plan_cost_breakdown(plan, h, w, n_frames)["total_s"]
+
+
+def plan_cost_hlo(plan: "BGPlan", h: int, w: int, n_frames: int = 1):
+    """Measured-structure cross-check of :func:`plan_cost`: lower + compile
+    the plan's real executable for the given geometry and run the optimized
+    HLO through ``launch.hlo_cost.analyze_hlo`` (trip-count-correct FLOPs /
+    HBM / collective bytes) into ``launch.hlo_analysis.roofline_terms``.
+    Returns the :class:`repro.launch.hlo_analysis.Roofline`. Slower than the
+    analytic model (a full XLA compile) — sweep/diagnostic use, not the
+    ``plan_for`` hot path."""
+    from repro.launch.hlo_analysis import roofline_terms
+
+    frames = jax.ShapeDtypeStruct((int(n_frames), int(h), int(w)), jnp.float32)
+    fn = plan.executable()
+    if plan.temporal:
+        gx, gy, gz = grid_shape(h, w, plan.cfg)
+        carry = jax.ShapeDtypeStruct(
+            (int(n_frames), gx, gy, gz, 2), jnp.float32
+        )
+        alpha = jax.ShapeDtypeStruct((int(n_frames),), jnp.float32)
+        lowered = fn.lower(frames, carry, alpha)
+    else:
+        lowered = fn.lower(frames)
+    compiled = lowered.compile()
+    hlo_text = compiled.as_text()
+    return roofline_terms({}, hlo_text)
 
 
 # -------------------------------------------------------------------- BGPlan
@@ -323,6 +498,87 @@ class BGPlan:
             )
         return tuple(ladder)
 
+    # -------------------------------------------------------- serialization
+    def to_json(self) -> dict:
+        """JSON-serializable payload capturing every dispatch decision.
+
+        The mesh itself is a device object and does not serialize; its
+        *size* does, and :meth:`from_json` rebuilds an equivalent 1-D batch
+        mesh on the loading host (which is the fleet-distribution contract:
+        a controller ships decisions, workers bind their own devices).
+        """
+        return {
+            "version": 1,
+            "cfg": dataclasses.asdict(self.cfg),
+            "backend": self.backend,
+            "temporal": self.temporal,
+            "batch_tile": self.batch_tile,
+            "mesh_size": self.mesh_size,
+            "quantize_output": self.quantize_output,
+            "interpret": self.interpret,
+        }
+
+    @classmethod
+    def from_json(cls, data: dict, *, mesh="auto") -> "BGPlan":
+        """Rebuild a plan from :meth:`to_json` output. ``mesh="auto"``
+        recreates a 1-D batch mesh of the serialized ``mesh_size`` (raising
+        if this host lacks the devices — a silently-shrunk mesh would shift
+        the dispatch geometry the hash vouches for); pass an explicit mesh
+        (or ``None`` for single-device) to override."""
+        if int(data.get("version", 1)) != 1:
+            raise ValueError(
+                f"unknown BGPlan serialization version {data.get('version')!r}"
+            )
+        if mesh == "auto":
+            ms = int(data.get("mesh_size", 1))
+            if ms <= 1:
+                mesh = None
+            else:
+                if jax.device_count() < ms:
+                    raise ValueError(
+                        f"serialized plan wants a {ms}-device mesh but only "
+                        f"{jax.device_count()} device(s) are visible; pass "
+                        f"mesh= explicitly to rebind"
+                    )
+                from repro.sharding.bg_shard import batch_mesh
+
+                mesh = batch_mesh(ms)
+        return cls(
+            cfg=BGConfig(**data["cfg"]),
+            backend=data["backend"],
+            temporal=bool(data.get("temporal", False)),
+            batch_tile=data.get("batch_tile"),
+            mesh=mesh,
+            quantize_output=bool(data.get("quantize_output", True)),
+            interpret=data.get("interpret"),
+        )
+
+    def plan_hash(self) -> str:
+        """Stable hex digest of the serialized plan — the compatibility
+        check the plan cache and fleet controller compare (two hosts agree
+        on a dispatch recipe iff their plan hashes match)."""
+        payload = json.dumps(self.to_json(), sort_keys=True,
+                             separators=(",", ":"))
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+    @property
+    def provenance(self) -> str:
+        """How this plan was chosen: ``"cache"`` (measured-plan cache hit),
+        ``"model"`` (roofline-ranked by ``plan_for``), ``"explicit"``
+        (``plan_for`` with every free decision pinned by the caller), or
+        ``"default"`` (constructed directly — kernel-default tiling, the
+        legacy-shim route). Informational — not part of plan equality or
+        the hash."""
+        return self.__dict__.get("_provenance", "default")
+
+    def describe(self) -> str:
+        """One-line dispatch summary for bench rows and serving logs."""
+        return (
+            f"backend={self.backend} bt={self.batch_tile} "
+            f"mesh={self.mesh_size} temporal={int(self.temporal)} "
+            f"src={self.provenance}"
+        )
+
     # ------------------------------------------------------------- dispatch
     def executable(self):
         """The plan's compiled callable (one per equal plan, cached).
@@ -396,6 +652,17 @@ class BGPlan:
 
 
 # ------------------------------------------------------------------ plan_for
+def _stamp(plan: BGPlan, provenance: str) -> BGPlan:
+    object.__setattr__(plan, "_provenance", provenance)
+    return plan
+
+
+# The batch-tile candidate grid the model ranks: powers of two below the
+# VMEM cap, plus the cap itself (the old heuristic's pick, so the model can
+# never do worse than "largest legal").
+_TILE_LADDER = (1, 2, 4, 8, 16, 32, 64)
+
+
 def plan_for(
     cfg: BGConfig,
     height: int,
@@ -410,40 +677,53 @@ def plan_for(
     stream_input: Optional[bool] = None,
     quantize_output: bool = True,
     interpret: Optional[bool] = None,
+    cache=None,
 ) -> BGPlan:
     """Build a concrete :class:`BGPlan` for the given frame geometry.
 
-    ``batch_tile`` and ``stream_input`` default to the VMEM-budget auto-tuner
-    (module docstring); pass explicit values to pin them. ``sharded=None``
-    auto-meshes over all local devices when more than one is present *and*
-    the resolved backend shards (the single-host oracle backends —
-    ``reference``/``staged`` — simply stay single-device); ``sharded=False``
-    forces single-device, ``True`` requires a mesh-capable backend and
-    builds the mesh; explicit ``mesh`` wins. ``temporal=True`` returns the
-    video-form plan (fused in-kernel grid-EMA; never input-streamed).
+    Free decisions (``backend`` within the fused family via
+    ``stream_input``, ``batch_tile``) are resolved in order: the on-disk
+    measured-plan cache (:mod:`repro.plan_cache`; ``cache=None`` uses the
+    process default, a :class:`~repro.plan_cache.PlanCache` pins one,
+    ``False`` disables the lookup), then the roofline latency model
+    (:func:`plan_cost`) ranking every legal candidate under the VMEM
+    budget. Pass explicit values to pin decisions and skip both; the
+    result's :attr:`BGPlan.provenance` records which route won.
+
+    ``sharded=None`` auto-meshes over all local devices when more than one
+    is present *and* the resolved backend shards (the single-host oracle
+    backends — ``reference``/``staged`` — simply stay single-device);
+    ``sharded=False`` forces single-device, ``True`` requires a
+    mesh-capable backend and builds the mesh; explicit ``mesh`` wins.
+    ``temporal=True`` returns the video-form plan (fused in-kernel
+    grid-EMA; never input-streamed).
     """
+    fully_auto = (
+        backend is None and stream_input is None and batch_tile is None
+    )
     if backend is None:
         if temporal:
             if stream_input:
                 raise ValueError(
                     "stream_input does not compose with a temporal carry"
                 )
-            backend = "fused"
+            candidates = ("fused",)
+        elif stream_input is None:
+            candidates = ("fused", "fused_streamed")
         else:
-            stream = (
-                auto_stream_input(cfg, height, width)
-                if stream_input is None
-                else bool(stream_input)
+            candidates = ("fused_streamed",) if stream_input else ("fused",)
+    else:
+        if (
+            stream_input is not None
+            and (backend == "fused_streamed") != bool(stream_input)
+            and backend in _FUSED_BACKENDS
+        ):
+            raise ValueError(
+                f"stream_input={stream_input} contradicts backend={backend!r}"
             )
-            backend = "fused_streamed" if stream else "fused"
-    elif stream_input is not None and (backend == "fused_streamed") != bool(
-        stream_input
-    ) and backend in _FUSED_BACKENDS:
-        raise ValueError(
-            f"stream_input={stream_input} contradicts backend={backend!r}"
-        )
+        candidates = (backend,)
 
-    mesh_capable = backend in _MESH_BACKENDS
+    mesh_capable = all(b in _MESH_BACKENDS for b in candidates)
     if sharded and not mesh_capable:
         raise ValueError(
             f"sharded=True needs a mesh-capable backend {_MESH_BACKENDS}, "
@@ -461,17 +741,7 @@ def plan_for(
         mesh = None
     mesh_size = 1 if mesh is None else int(mesh.devices.size)
 
-    if batch_tile is None:
-        if backend in _FUSED_BACKENDS:
-            batch_tile = auto_batch_tile(
-                cfg,
-                height,
-                width,
-                n_frames,
-                stream_input=backend == "fused_streamed",
-                mesh_size=mesh_size,
-            )
-    elif mesh_size > 1 and n_frames is not None:
+    if batch_tile is not None and mesh_size > 1 and n_frames is not None:
         shard = -(-int(n_frames) // mesh_size)
         if batch_tile > shard:
             raise ValueError(
@@ -482,15 +752,82 @@ def plan_for(
                 f"use batch_tile<={shard} or batch_tile=None (auto)"
             )
 
-    return BGPlan(
-        cfg=cfg,
-        backend=backend,
-        temporal=temporal,
-        batch_tile=batch_tile,
-        mesh=mesh,
-        quantize_output=quantize_output,
-        interpret=interpret,
+    def build(be, bt):
+        return BGPlan(
+            cfg=cfg,
+            backend=be,
+            temporal=temporal,
+            batch_tile=bt,
+            mesh=mesh,
+            quantize_output=quantize_output,
+            interpret=interpret,
+        )
+
+    fused_family = all(b in _FUSED_BACKENDS for b in candidates)
+    no_freedom = len(candidates) == 1 and (
+        batch_tile is not None or not fused_family
     )
+    if no_freedom:
+        # every decision pinned (or an oracle backend with none to make)
+        return _stamp(build(candidates[0], batch_tile), "explicit")
+
+    # ---- measured-plan cache (fully-auto calls only: a cached entry is a
+    # complete decision and must not override a pinned kwarg)
+    if fully_auto and cache is not False:
+        from repro.plan_cache import get_default_cache, workload_key
+
+        pc = get_default_cache() if cache is None else cache
+        ent = pc.lookup(
+            workload_key(cfg, height, width, n_frames, temporal, mesh_size)
+        )
+        if ent is not None:
+            try:
+                pj = ent["plan"]
+                be, bt = pj["backend"], pj.get("batch_tile")
+                ok = be in candidates
+                if (
+                    ok
+                    and bt is not None
+                    and mesh_size > 1
+                    and n_frames is not None
+                ):
+                    ok = bt <= -(-int(n_frames) // mesh_size)
+                if ok:
+                    return _stamp(build(be, bt), "cache")
+            except (KeyError, TypeError, ValueError):
+                pass  # stale/incompatible entry: fall through to the model
+
+    # ---- roofline-model ranking over the legal candidate grid
+    plans = []
+    for be in candidates:
+        if batch_tile is not None:
+            tiles = [batch_tile]
+        else:
+            cap = auto_batch_tile(
+                cfg,
+                height,
+                width,
+                n_frames,
+                stream_input=be == "fused_streamed",
+                mesh_size=mesh_size,
+                temporal=temporal,
+            )
+            tiles = sorted({t for t in _TILE_LADDER if t < cap} | {cap})
+        plans.extend(build(be, t) for t in tiles)
+    n_eval = (
+        int(n_frames)
+        if n_frames is not None
+        else max(p.batch_tile for p in plans)
+    )
+    best = min(
+        plans,
+        key=lambda p: (
+            plan_cost(p, height, width, n_eval),
+            p.backend != "fused",  # exact tie: no reason to pay the DMA path
+            -p.batch_tile,
+        ),
+    )
+    return _stamp(best, "model")
 
 
 @functools.lru_cache(maxsize=256)

@@ -1,0 +1,224 @@
+"""Persistent measured-plan cache: the serialized artifact behind ``plan_for``.
+
+The roofline model in :mod:`repro.plan` *predicts* the fastest legal dispatch
+plan for a workload; ``benchmarks/bench_plan_sweep.py`` *measures* it by
+grid-searching the candidate space on the actual host. This module is where
+the measured winners live between processes: a small JSON file mapping
+
+    workload key  ->  {plan: BGPlan.to_json(), plan_hash, measured_us, ...}
+
+that ``plan_for`` consults **before** falling back to the model. The key
+bakes in everything that makes a measurement transferable:
+
+  * the workload geometry — ``(h, w)``, every ``BGConfig`` field, the pack
+    size ``n_frames``, ``temporal``, and the mesh size (dispatch geometry
+    shifts with the per-device shard);
+  * the host/backend fingerprint — machine arch, CPU count, and the JAX
+    backend. A tile tuned on a TPU says nothing about interpret-mode CPU
+    dispatch, so foreign entries simply never match.
+
+The file is the artifact the ROADMAP item-1 fleet controller distributes: a
+controller runs the sweep once, ships the JSON to its workers, and every
+worker's ``plan_for`` resolves the same measured-best compiled-dispatch
+recipe (``BGPlan.from_json`` + ``plan_hash`` compatibility checking).
+
+Corruption tolerance: a missing, truncated, or garbage cache file is treated
+as empty (warn once) — a broken cache must degrade to the model, never take
+the service down. Writes are atomic (tmp + rename) so a crashed writer
+cannot corrupt a reader.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+import warnings
+from typing import Optional
+
+__all__ = [
+    "PlanCache",
+    "workload_key",
+    "host_fingerprint",
+    "default_cache_path",
+    "get_default_cache",
+    "set_default_cache",
+    "CACHE_ENV_VAR",
+    "CACHE_VERSION",
+]
+
+CACHE_ENV_VAR = "REPRO_PLAN_CACHE"
+CACHE_VERSION = 1
+
+
+def host_fingerprint() -> str:
+    """Machine + JAX-backend fingerprint baked into every workload key.
+
+    Measured-best plans are host-specific (a tile tuned on a TPU is
+    meaningless for interpret-mode CPU dispatch); entries recorded under a
+    different fingerprint never match a lookup on this host.
+    """
+    import platform
+
+    import jax
+
+    return f"{platform.machine()}-{os.cpu_count()}cpu-{jax.default_backend()}"
+
+
+def workload_key(
+    cfg,
+    h: int,
+    w: int,
+    n_frames: Optional[int] = None,
+    temporal: bool = False,
+    mesh_size: int = 1,
+) -> str:
+    """Canonical cache key for one (workload, host) pair."""
+    return (
+        f"v{CACHE_VERSION}|{host_fingerprint()}|h{int(h)}w{int(w)}"
+        f"|r{cfg.r}ss{cfg.sigma_s:g}sr{cfg.sigma_r:g}im{cfg.intensity_max:g}"
+        f"|{cfg.normalize_mode}.{cfg.weight_mode}"
+        f"|n{'any' if n_frames is None else int(n_frames)}"
+        f"|t{int(bool(temporal))}|m{int(mesh_size)}"
+    )
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(CACHE_ENV_VAR)
+    if env:
+        return os.path.expanduser(env)
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "bg_plan_cache.json"
+    )
+
+
+class PlanCache:
+    """On-disk JSON store of measured-best plans, keyed by workload + host.
+
+    Lazy-loading and tolerant: a missing or corrupt file reads as empty (one
+    warning per instance), and every ``record`` rewrites the file atomically.
+    Thread-safe for the engine-construction paths that race ``plan_for``.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(path) if path else default_cache_path()
+        self._entries: Optional[dict] = None
+        self._lock = threading.Lock()
+        self._warned = False
+
+    # ------------------------------------------------------------------ io
+    def _load(self) -> dict:
+        if self._entries is not None:
+            return self._entries
+        entries: dict = {}
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if (
+                isinstance(data, dict)
+                and data.get("version") == CACHE_VERSION
+                and isinstance(data.get("entries"), dict)
+            ):
+                entries = data["entries"]
+            elif not self._warned:
+                self._warned = True
+                warnings.warn(
+                    f"plan cache {self.path}: unrecognized layout "
+                    f"(version != {CACHE_VERSION}); treating as empty"
+                )
+        except FileNotFoundError:
+            pass
+        except (OSError, json.JSONDecodeError, TypeError, ValueError) as e:
+            if not self._warned:
+                self._warned = True
+                warnings.warn(
+                    f"plan cache {self.path} is unreadable ({e!r}); treating "
+                    f"as empty — the model fallback serves until a sweep "
+                    f"rewrites it"
+                )
+        self._entries = entries
+        return entries
+
+    def _write(self) -> None:
+        payload = {"version": CACHE_VERSION, "entries": self._entries or {}}
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".plan_cache.", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)  # atomic on POSIX
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # ----------------------------------------------------------------- api
+    def lookup(self, key: str) -> Optional[dict]:
+        """The entry for ``key``, or None. Entries are plain dicts with at
+        least ``plan`` (a ``BGPlan.to_json`` payload) and ``plan_hash``."""
+        with self._lock:
+            ent = self._load().get(key)
+            if not isinstance(ent, dict) or "plan" not in ent:
+                return None
+            return ent
+
+    def record(
+        self,
+        key: str,
+        plan,
+        measured_us: Optional[float] = None,
+        model_us: Optional[float] = None,
+        source: str = "sweep",
+    ) -> dict:
+        """Store ``plan`` as the measured winner for ``key`` (atomic write)."""
+        entry = {
+            "plan": plan.to_json(),
+            "plan_hash": plan.plan_hash(),
+            "measured_us": measured_us,
+            "model_us": model_us,
+            "source": source,
+            "recorded": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with self._lock:
+            self._load()
+            self._entries[key] = entry
+            self._write()
+        return entry
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries = {}
+            self._write()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._load())
+
+
+# One process-wide default instance (what plan_for consults when no explicit
+# cache is passed). Replaceable for tests / controller processes.
+_DEFAULT_CACHE: Optional[PlanCache] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def get_default_cache() -> PlanCache:
+    global _DEFAULT_CACHE
+    with _DEFAULT_LOCK:
+        if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != default_cache_path():
+            # re-resolve when REPRO_PLAN_CACHE changed (tests point it at
+            # tmp dirs; long-lived processes keep one instance otherwise)
+            _DEFAULT_CACHE = PlanCache()
+        return _DEFAULT_CACHE
+
+
+def set_default_cache(cache: Optional[PlanCache]) -> Optional[PlanCache]:
+    """Install ``cache`` as the process default; returns the previous one."""
+    global _DEFAULT_CACHE
+    with _DEFAULT_LOCK:
+        prev = _DEFAULT_CACHE
+        _DEFAULT_CACHE = cache
+        return prev

@@ -1,0 +1,17 @@
+"""Suite-wide fixtures.
+
+Plan-cache hermeticity: ``repro.plan.plan_for`` consults the persistent
+measured-plan cache (``~/.cache/repro/bg_plan_cache.json`` or
+``$REPRO_PLAN_CACHE``) before the roofline model. Tests assert the *model's*
+picks, so an ambient cache left by a ``bench_plan_sweep`` run on the
+developer's machine must not leak into them — every test session gets its
+own empty cache file unless a test points elsewhere itself.
+"""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_plan_cache(tmp_path_factory, monkeypatch):
+    path = tmp_path_factory.getbasetemp() / "plan_cache.json"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(path))
+    yield

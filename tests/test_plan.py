@@ -491,3 +491,121 @@ def test_sharded_plans_bit_identical_multidevice():
         print("OK plan_for mesh")
         """
     )
+
+
+# ------------------------------------------- roofline cost model + plan cache
+def test_plan_cost_monotonicity():
+    from repro.plan import plan_cost, plan_cost_breakdown
+
+    p = BGPlan(cfg=CFG, backend="fused", batch_tile=4)
+    # more pixels / more frames cost more
+    assert plan_cost(p, 60, 96, 8) < plan_cost(p, 120, 192, 8)
+    assert plan_cost(p, 60, 96, 8) < plan_cost(p, 60, 96, 32)
+    # non-increasing in batch_tile at fixed total work (fewer, bigger steps)
+    costs = [
+        plan_cost(BGPlan(cfg=CFG, backend="fused", batch_tile=t), 60, 96, 16)
+        for t in (1, 2, 4, 8, 16)
+    ]
+    assert all(a >= b for a, b in zip(costs, costs[1:]))
+    # the stream-vs-default crossover: the manual-DMA path wins at the paper
+    # full-HD radius (saved mask bytes beat the DMA issue cost) and loses at
+    # small service frames — the PR-5 256 KiB rule as a derived quantity
+    paper = BGConfig(r=12, sigma_s=8.0, sigma_r=70.0)
+    fused_hd = BGPlan(cfg=paper, backend="fused", batch_tile=2)
+    streamed_hd = BGPlan(cfg=paper, backend="fused_streamed", batch_tile=2)
+    assert plan_cost(streamed_hd, 1080, 1920, 4) < plan_cost(fused_hd, 1080, 1920, 4)
+    fused_sm = BGPlan(cfg=CFG, backend="fused", batch_tile=4)
+    streamed_sm = BGPlan(cfg=CFG, backend="fused_streamed", batch_tile=4)
+    assert plan_cost(fused_sm, 60, 96, 8) < plan_cost(streamed_sm, 60, 96, 8)
+    # the temporal carry's HBM round-trip is charged
+    temporal = BGPlan(cfg=CFG, backend="fused", temporal=True, batch_tile=4)
+    assert plan_cost(temporal, 60, 96, 8) > plan_cost(fused_sm, 60, 96, 8)
+    bd = plan_cost_breakdown(fused_sm, 60, 96, 8)
+    assert bd["total_s"] >= bd["bound_s"] > 0
+    assert bd["bound_s"] == max(bd["compute_s"], bd["memory_s"])
+    assert bd["flops"] > 0 and bd["hbm_bytes"] > 0 and bd["steps"] > 0
+    # oracle backends are ranked too (never preferred over a legal fused plan
+    # at equal geometry by the model's structural charges)
+    ref = BGPlan(cfg=CFG, backend="reference")
+    assert plan_cost(ref, 60, 96, 8) > 0
+
+
+def test_step_bytes_temporal_carry():
+    from repro.core.bilateral_grid import grid_shape
+    from repro.plan import step_bytes_per_frame
+
+    base = step_bytes_per_frame(CFG, 60, 96)
+    temp = step_bytes_per_frame(CFG, 60, 96, temporal=True)
+    _, gy, gz = grid_shape(60, 96, CFG)
+    # exactly the double-buffered carry in/out blocks, 4 bytes per element
+    assert temp - base == 4 * 8 * gz * gy
+    # and the tuner sees it: a temporal tile never exceeds the non-temporal
+    assert auto_batch_tile(CFG, 60, 96, temporal=True) <= auto_batch_tile(
+        CFG, 60, 96
+    )
+
+
+def test_auto_batch_tile_budget_edges():
+    from repro.plan import VMEM_STEP_BUDGET_BYTES, step_bytes_per_frame
+
+    paper = BGConfig(r=12, sigma_s=8.0, sigma_r=70.0)
+    per = step_bytes_per_frame(paper, 1080, 1920)
+    assert auto_batch_tile(paper, 1080, 1920) == max(
+        1, min(VMEM_STEP_BUDGET_BYTES // per, MAX_AUTO_TILE)
+    )
+    # a geometry whose single-frame step blows the budget still gets a legal
+    # tile of 1 (the plan must exist; VMEM pressure is the kernel's problem)
+    huge = BGConfig(r=16, sigma_s=2.0, sigma_r=10.0)
+    assert step_bytes_per_frame(huge, 4320, 7680) > VMEM_STEP_BUDGET_BYTES
+    assert auto_batch_tile(huge, 4320, 7680) == 1
+    # the mesh cap is the per-device share, rounded UP (ceil): 7 frames on 2
+    # devices means one device gets 4
+    assert auto_batch_tile(CFG, 60, 96, n_frames=7, mesh_size=2) == 4
+    assert auto_batch_tile(CFG, 60, 96, n_frames=64, mesh_size=8) == 8
+
+
+def test_plan_serialization_round_trip():
+    import json as _json
+
+    p = plan_for(
+        CFG, 60, 96, n_frames=16, sharded=False, interpret=True,
+        quantize_output=False,
+    )
+    d = p.to_json()
+    assert _json.loads(_json.dumps(d)) == d  # JSON-clean payload
+    q = BGPlan.from_json(d)
+    assert q == p
+    assert q.plan_hash() == p.plan_hash()
+    # the hash vouches for every dispatch decision
+    assert p.with_tile(8).plan_hash() != p.plan_hash()
+    assert p.with_options(quantize_output=True).plan_hash() != p.plan_hash()
+    assert p.as_temporal().plan_hash() != p.plan_hash()
+    # a serialized mesh larger than this host is an error, not a silent
+    # single-device shrink (the hash would vouch for the wrong geometry)
+    import pytest as _pytest
+
+    with _pytest.raises(ValueError, match="device"):
+        BGPlan.from_json({**d, "mesh_size": 4096})
+    with _pytest.raises(ValueError, match="version"):
+        BGPlan.from_json({**d, "version": 99})
+
+
+def test_plan_provenance_labels():
+    # direct construction = the kernel-default heuristic route
+    assert BGPlan(cfg=CFG).provenance == "default"
+    # free decisions resolved by the roofline ranking
+    tuned = plan_for(CFG, 60, 96, n_frames=8, sharded=False, cache=False)
+    assert tuned.provenance == "model"
+    # everything pinned by the caller
+    pinned = plan_for(
+        CFG, 60, 96, backend="fused", batch_tile=4, sharded=False
+    )
+    assert pinned.provenance == "explicit"
+    assert "src=model" in tuned.describe()
+    # provenance is informational: it must not split plan equality or hashes
+    assert tuned.with_options() == tuned
+    assert BGPlan(cfg=CFG, backend="fused", batch_tile=8).plan_hash() == (
+        plan_for(
+            CFG, 60, 96, n_frames=8, sharded=False, cache=False
+        ).plan_hash()
+    )

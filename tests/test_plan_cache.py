@@ -1,0 +1,149 @@
+"""Persistent measured-plan cache: round-trip, plan_for integration, and
+corruption tolerance.
+
+The suite-wide conftest fixture already points ``REPRO_PLAN_CACHE`` at a
+per-session tmp file, so the *default* cache here is hermetic; most tests
+pin their own ``PlanCache(tmp_path / ...)`` anyway to stay independent of
+each other.
+"""
+import json
+
+import pytest
+
+from repro.core import BGConfig
+from repro.plan import BGPlan, plan_for
+from repro.plan_cache import (
+    CACHE_VERSION,
+    PlanCache,
+    get_default_cache,
+    host_fingerprint,
+    set_default_cache,
+    workload_key,
+)
+
+CFG = BGConfig(r=4, sigma_s=3.0, sigma_r=50.0)
+H, W, B = 60, 96, 8
+
+
+def _key(n_frames=B, temporal=False, mesh_size=1):
+    return workload_key(CFG, H, W, n_frames, temporal, mesh_size)
+
+
+def test_record_lookup_round_trip(tmp_path):
+    pc = PlanCache(str(tmp_path / "cache.json"))
+    assert len(pc) == 0 and pc.lookup(_key()) is None
+    plan = BGPlan(cfg=CFG, backend="fused", batch_tile=2)
+    pc.record(_key(), plan, measured_us=123.4, model_us=150.0)
+    # a fresh instance re-reads the file from disk
+    pc2 = PlanCache(str(tmp_path / "cache.json"))
+    ent = pc2.lookup(_key())
+    assert ent is not None
+    assert ent["plan_hash"] == plan.plan_hash()
+    assert ent["measured_us"] == 123.4 and ent["source"] == "sweep"
+    assert BGPlan.from_json(ent["plan"]) == plan
+    # the on-disk layout is the documented versioned envelope
+    data = json.loads((tmp_path / "cache.json").read_text())
+    assert data["version"] == CACHE_VERSION
+    assert _key() in data["entries"]
+
+
+def test_plan_for_consults_cache_before_model(tmp_path):
+    pc = PlanCache(str(tmp_path / "cache.json"))
+    model_pick = plan_for(CFG, H, W, n_frames=B, sharded=False, cache=False)
+    assert model_pick.provenance == "model"
+    # record a deliberately different winner: tile 1 never wins the model
+    # ranking for a multi-frame pack (step overhead), so a hit is provable
+    winner = BGPlan(cfg=CFG, backend="fused", batch_tile=1)
+    assert winner.batch_tile != model_pick.batch_tile
+    pc.record(_key(), winner, measured_us=1.0)
+    hit = plan_for(CFG, H, W, n_frames=B, sharded=False, cache=pc)
+    assert hit.provenance == "cache"
+    assert hit.batch_tile == 1 and hit.backend == "fused"
+    assert "src=cache" in hit.describe()
+    # cache=False bypasses it entirely
+    bypass = plan_for(CFG, H, W, n_frames=B, sharded=False, cache=False)
+    assert bypass.provenance == "model"
+    assert bypass == model_pick
+    # a pinned kwarg makes the call not fully-auto: the cache must not
+    # override it (backend is still free, so the model fills it in)
+    pinned = plan_for(
+        CFG, H, W, n_frames=B, batch_tile=4, sharded=False, cache=pc
+    )
+    assert pinned.provenance == "model" and pinned.batch_tile == 4
+    fully_pinned = plan_for(
+        CFG, H, W, backend="fused", batch_tile=4, sharded=False, cache=pc
+    )
+    assert fully_pinned.provenance == "explicit"
+
+
+def test_default_cache_follows_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "env_cache.json"))
+    set_default_cache(None)  # drop any instance bound to the old path
+    try:
+        pc = get_default_cache()
+        assert pc.path == str(tmp_path / "env_cache.json")
+        winner = BGPlan(cfg=CFG, backend="fused", batch_tile=1)
+        pc.record(_key(), winner)
+        # cache=None (the default) resolves through the env-pointed cache
+        hit = plan_for(CFG, H, W, n_frames=B, sharded=False)
+        assert hit.provenance == "cache" and hit.batch_tile == 1
+    finally:
+        set_default_cache(None)
+
+
+def test_corrupt_cache_tolerated(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json at all")
+    pc = PlanCache(str(path))
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert pc.lookup(_key()) is None
+    # recording rebuilds a clean file
+    pc.record(_key(), BGPlan(cfg=CFG, backend="fused", batch_tile=2))
+    assert PlanCache(str(path)).lookup(_key()) is not None
+    # an unrecognized version is treated as empty, not an error
+    path2 = tmp_path / "future.json"
+    path2.write_text(json.dumps({"version": 99, "entries": {"x": {}}}))
+    pc2 = PlanCache(str(path2))
+    with pytest.warns(UserWarning, match="unrecognized"):
+        assert pc2.lookup(_key()) is None
+    # and plan_for degrades to the model instead of crashing
+    got = plan_for(CFG, H, W, n_frames=B, sharded=False, cache=pc2)
+    assert got.provenance == "model"
+
+
+def test_foreign_host_entries_never_match(tmp_path):
+    pc = PlanCache(str(tmp_path / "cache.json"))
+    fp = host_fingerprint()
+    foreign = _key().replace(fp, "sparc64-1cpu-tpu", 1)
+    assert foreign != _key()
+    pc.record(foreign, BGPlan(cfg=CFG, backend="fused", batch_tile=1))
+    got = plan_for(CFG, H, W, n_frames=B, sharded=False, cache=pc)
+    assert got.provenance == "model"  # the foreign entry was never consulted
+
+
+def test_incompatible_cached_backend_falls_back_to_model(tmp_path):
+    pc = PlanCache(str(tmp_path / "cache.json"))
+    # a streamed winner recorded under the *temporal* key is illegal there
+    # (the input-streamed kernel cannot carry the grid EMA)
+    pc.record(
+        _key(temporal=True),
+        BGPlan(cfg=CFG, backend="fused_streamed", batch_tile=2),
+    )
+    got = plan_for(
+        CFG, H, W, n_frames=B, temporal=True, sharded=False, cache=pc
+    )
+    assert got.provenance == "model"
+    assert got.backend != "fused_streamed"
+
+
+def test_workload_key_separates_workloads():
+    keys = {
+        _key(),
+        _key(n_frames=None),
+        _key(temporal=True),
+        _key(mesh_size=8),
+        workload_key(CFG, H + 1, W, B, False, 1),
+        workload_key(BGConfig(r=8, sigma_s=3.0, sigma_r=50.0), H, W, B, False, 1),
+    }
+    assert len(keys) == 6
+    assert all(host_fingerprint() in k for k in keys)
