@@ -42,7 +42,12 @@ import numpy as np
 
 from repro.core import BGConfig, add_gaussian_noise
 from repro.data import synthetic_video
-from repro.serving import AsyncFrameEngine, FrameDenoiseEngine, FrameRequest
+from repro.serving import (
+    AsyncFrameEngine,
+    EngineStats,
+    FrameDenoiseEngine,
+    FrameRequest,
+)
 from repro.video import MultiStreamPacker, temporal_denoise
 
 # Async >= sync is the PR-3 acceptance floor; the async engine's measured
@@ -139,6 +144,7 @@ def run(quick: bool = False):
     for a, b in zip(outs_sync, outs_async):
         np.testing.assert_array_equal(a, b)  # same frames, same results
 
+    stats_plain = stats  # last per-frame async engine snapshot (merged below)
     fps_sync = n / min(t_sync)
     fps_async = n / min(t_async)
     tag = f"s{n_streams}_f{frames_per_stream}_{h}x{w}"
@@ -216,6 +222,25 @@ def run(quick: bool = False):
                 float(stat_values[key]),
                 f"{unit} — async temporal engine telemetry snapshot "
                 f"(serving.EngineStats)",
+            )
+        )
+    # cross-engine aggregation through the fleet's exact-merge path: the
+    # per-frame and temporal engines' reservoirs concatenate, so the merged
+    # percentiles are percentiles of the union — the same EngineStats.merge
+    # the FleetRouter's FleetStats rolls N workers up with
+    merged = EngineStats.merge([stats_plain, stats])
+    for key, unit in (
+        ("completed", "count over both engines"),
+        ("dispatches", "count over both engines"),
+        ("latency_ms_p50", "ms, exact over concatenated reservoirs"),
+        ("latency_ms_p99", "ms, exact over concatenated reservoirs"),
+    ):
+        rows.append(
+            (
+                f"bg_video/merged_{key}_{tag}",
+                float(merged[key]),
+                f"{unit} — EngineStats.merge of the per-frame + temporal "
+                f"async engines (the fleet aggregation path)",
             )
         )
     # warm-path gate, window 2: per-side minima over both windows

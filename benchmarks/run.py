@@ -145,7 +145,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma list: tables,quality,kernels,throughput,sharded,video,"
-        "chaos,plan_sweep,lm,roofline",
+        "chaos,fleet,plan_sweep,lm,roofline",
     )
     ap.add_argument(
         "--no-snapshot",
@@ -156,6 +156,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_bg_chaos,
+        bench_bg_fleet,
         bench_bg_kernels,
         bench_bg_quality,
         bench_bg_sharded,
@@ -175,6 +176,7 @@ def main() -> None:
         "sharded": bench_bg_sharded,
         "video": bench_video_stream,
         "chaos": bench_bg_chaos,
+        "fleet": bench_bg_fleet,
         "plan_sweep": bench_plan_sweep,
         "lm": bench_lm,
         "roofline": bench_roofline,

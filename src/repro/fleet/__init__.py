@@ -1,0 +1,76 @@
+"""Fleet serving: N workers, one plan, sticky streams — ROADMAP item 1.
+
+The paper's pipeline never stalls because every stage is sized for
+line-rate; the serving-side analog at fleet scale is a router that keeps N
+:class:`~repro.serving.AsyncFrameEngine` workers fed without ever moving a
+warm temporal stream or letting one slow worker back the fleet up. Workers
+are thread-hosted in-process today, but the :class:`~repro.fleet.worker.
+Worker` protocol is plain-data-in/Future-out, so a process-spanning backend
+slots in without touching the router.
+
+Request path::
+
+    client --> FleetRouter.submit(frame, stream_id)
+                 |  admission: reliability.validate_frame (once, here;
+                 |             workers trust the front door)
+                 |  placement: affinity table (stream) / least-loaded
+                 |             live worker (stateless)
+                 |  backpressure: backlog >= max_worker_queue -> shed with
+                 |             structured FleetSaturated (the router sheds
+                 |             BEFORE any worker queue can overflow)
+                 v
+               LocalWorker.submit --> AsyncFrameEngine --> Future
+
+Affinity rules: stream placement is rendezvous (highest-random-weight)
+hashing over live workers, recorded in an explicit affinity table at
+``open_stream`` and sticky from then on — a warm temporal carry is a
+bit-product of one worker's dispatch sequence and **never migrates while
+warm**. The only move is through :meth:`FleetRouter.fail_worker`, which
+quarantines first; ``rebalance_log`` records every move for audit.
+
+Plan distribution: a :class:`PlanController` resolves ONE tuned
+:class:`~repro.plan.BGPlan` (``plan_for``: measured cache -> roofline
+model), serializes it (``to_json`` + ``plan_hash``), and every worker is
+built from that payload — equal plans share one compiled executable, so
+the fleet costs one compile. Mixed-hash fleets are refused at construction
+(:class:`PlanMismatch`): carries are not portable across dispatch
+geometries.
+
+Failure semantics: worker death is detected three ways (the
+:class:`FleetWatchdog` liveness poller, submit-path ``WorkerDown``/
+``EngineClosed``, or a tripped per-worker :class:`WorkerHealth` breaker)
+and always funnels into ``fail_worker``'s drain-and-quarantine: kill the
+worker (its queued futures fail with structured ``EngineClosed``),
+reset its warm streams through the existing
+``MultiStreamPacker.quarantine`` cold-restart path, re-pin them cold onto
+rendezvous survivors. A worker loss degrades exactly its own streams, for
+exactly one EMA warm-up each — never a corrupt carry, never a fleet-wide
+outage. ``benchmarks/bench_bg_fleet.py`` soaks all of this (clean phase +
+worker-kill phase) and gates recovery throughput and zero silent
+corruption in CI.
+
+Telemetry: :class:`FleetStats` merges per-worker ``EngineStats`` exactly
+(concatenated latency reservoirs, summed counters — see
+``EngineStats.merge``) and adds the router's shed/rebalance/quarantine
+counters.
+"""
+from .controller import PlanController
+from .errors import FleetError, FleetSaturated, PlanMismatch, WorkerDown
+from .health import FleetWatchdog, WorkerHealth
+from .router import FleetRouter
+from .stats import FleetStats
+from .worker import LocalWorker, Worker
+
+__all__ = [
+    "FleetRouter",
+    "PlanController",
+    "Worker",
+    "LocalWorker",
+    "FleetWatchdog",
+    "WorkerHealth",
+    "FleetStats",
+    "FleetError",
+    "FleetSaturated",
+    "WorkerDown",
+    "PlanMismatch",
+]

@@ -1,0 +1,422 @@
+"""The fleet router: sticky stream affinity, admission, backpressure.
+
+Request path (see the package docstring for the full architecture):
+
+  submit(frame, stream_id)
+    -> admission: ``reliability.validate_frame`` host-side, once, at the
+       front door (workers run with ``admission_checks=False``)
+    -> placement: the **affinity table** for stream traffic (sticky), the
+       least-loaded live worker for stateless frames
+    -> backpressure: the target worker's undispatched backlog is checked
+       against ``max_worker_queue`` *before* the hand-off; at the bound the
+       frame is shed with structured :class:`FleetSaturated` — the router
+       sheds first, so a worker's own (larger) request queue never
+       overflows and ``submit(block=True)`` can never wedge the caller on
+       a saturated fleet
+    -> hand-off: ``worker.submit`` returns the client's Future unchanged.
+
+Affinity rules: placement is rendezvous (highest-random-weight) hashing
+over the live workers — deterministic, and removing a worker re-places
+*only* that worker's streams. The chosen worker is recorded in an explicit
+``{stream_id: wid}`` affinity table at ``open_stream`` and **never
+recomputed while the stream is warm**: a temporal carry is a bit-product of
+one worker's dispatch sequence, so silent migration would splice two
+recursions. The only path that moves a stream is :meth:`fail_worker`,
+which first resets the carry through ``MultiStreamPacker.quarantine`` —
+every migration in ``rebalance_log`` is therefore preceded by a quarantine,
+which is exactly the invariant ``tests/test_fleet.py`` asserts.
+
+Failure semantics: a worker death (watchdog detection, submit-path
+``WorkerDown``/``EngineClosed``, or a tripped :class:`WorkerHealth`
+breaker) triggers drain-and-quarantine — kill the worker (queued futures
+fail with structured ``EngineClosed``), quarantine its warm streams, re-pin
+all its streams cold onto survivors. Degradation is one warm-up per warm
+victim stream; survivors' carries are untouched.
+"""
+from __future__ import annotations
+
+import hashlib
+import queue
+import threading
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+from repro.reliability import EngineClosed, validate_frame
+
+from .errors import FleetSaturated, PlanMismatch, WorkerDown
+from .health import FleetWatchdog, WorkerHealth
+from .worker import LocalWorker, Worker
+
+__all__ = ["FleetRouter"]
+
+# Caller bugs pass through unwrapped (same contract as GuardedDispatch):
+# retrying or rebalancing a bad request masks the traceback.
+_CLIENT_ERRORS = (KeyError, ValueError, TypeError)
+
+
+def _rendezvous_score(wid: Hashable, sid: Hashable) -> bytes:
+    return hashlib.sha256(f"{wid!r}|{sid!r}".encode()).digest()
+
+
+class FleetRouter:
+    """Routes frames across N workers serving one compiled dispatch plan."""
+
+    def __init__(
+        self,
+        workers: Optional[Sequence[Worker]] = None,
+        *,
+        controller=None,
+        n_workers: Optional[int] = None,
+        max_worker_queue: int = 64,
+        admission_checks: bool = True,
+        health_interval_s: Optional[float] = 0.5,
+        breaker_threshold: int = 3,
+        breaker_cooldown_s: float = 30.0,
+        worker_kwargs: Optional[dict] = None,
+    ):
+        """Either hand explicit ``workers`` or a ``controller`` +
+        ``n_workers`` and the router builds :class:`LocalWorker`\\ s from the
+        controller's single payload (``worker_kwargs`` passes through).
+        ``max_worker_queue`` is the router's per-worker backlog bound —
+        keep it below the workers' own ``max_queue`` so the router always
+        sheds first. ``health_interval_s=None`` disables the watchdog
+        thread (failures are still detected on the submit path)."""
+        if workers is None:
+            if controller is None or n_workers is None:
+                raise TypeError(
+                    "FleetRouter needs workers= or (controller=, n_workers=)"
+                )
+            if n_workers < 1:
+                raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+            payload = controller.payload()
+            workers = [
+                LocalWorker(i, payload, **(worker_kwargs or {}))
+                for i in range(n_workers)
+            ]
+        self.workers: Tuple[Worker, ...] = tuple(workers)
+        if not self.workers:
+            raise ValueError("FleetRouter needs at least one worker")
+        self._by_wid = {w.wid: w for w in self.workers}
+        if len(self._by_wid) != len(self.workers):
+            raise ValueError("duplicate worker wids")
+        hashes = {w.plan_hash for w in self.workers}
+        if len(hashes) != 1:
+            # refused at construction: temporal carries are not portable
+            # across dispatch geometries, so a mixed fleet could corrupt
+            # streams on the first rebalance
+            raise PlanMismatch(
+                f"mixed-plan fleet: workers disagree on plan_hash "
+                f"({sorted(hashes)}) — all workers must be built from one "
+                f"controller payload"
+            )
+        self.plan_hash: str = next(iter(hashes))
+        if controller is not None:
+            controller.verify(self.workers)
+        self.controller = controller
+        self.temporal = bool(self.workers[0].temporal)
+        if max_worker_queue < 1:
+            raise ValueError(
+                f"max_worker_queue must be >= 1, got {max_worker_queue}"
+            )
+        self.max_worker_queue = max_worker_queue
+        self.admission_checks = admission_checks
+
+        self._lock = threading.RLock()
+        self._affinity: Dict[Hashable, Hashable] = {}  # sid -> wid (sticky)
+        self._alphas: Dict[Hashable, float] = {}
+        self._dead: set = set()
+        self._closed = False
+        self._rr = 0  # stateless round-robin tiebreak
+        self._router_shed = 0
+        self._rebalanced = 0
+        self._quarantined = 0
+        self._workers_lost = 0
+        # every migration ever: (sid, old_wid, new_wid) — all of them pass
+        # through fail_worker's quarantine, the affinity invariant's proof
+        self.rebalance_log: List[Tuple[Hashable, Hashable, Hashable]] = []
+        self._health = {
+            w.wid: WorkerHealth(breaker_threshold, breaker_cooldown_s)
+            for w in self.workers
+        }
+        self._watchdog = (
+            None
+            if health_interval_s is None
+            else FleetWatchdog(self, interval_s=health_interval_s)
+        )
+
+    # ----------------------------------------------------------- placement
+    def _place_locked(self, sid: Hashable) -> Worker:
+        """Rendezvous placement over live workers (call with lock held):
+        deterministic, and a worker's removal re-places only its own
+        streams — every survivor keeps its rendezvous winners."""
+        alive = [w for w in self.workers if w.wid not in self._dead]
+        if not alive:
+            raise WorkerDown(None, "no live workers to place on")
+        return max(alive, key=lambda w: _rendezvous_score(w.wid, sid))
+
+    def is_dead(self, wid: Hashable) -> bool:
+        with self._lock:
+            return wid in self._dead
+
+    @property
+    def workers_alive(self) -> int:
+        with self._lock:
+            return len(self.workers) - len(self._dead)
+
+    # ------------------------------------------------------------- streams
+    def open_stream(self, sid: Hashable, alpha: float = 0.0) -> Hashable:
+        """Open ``sid`` on its rendezvous-placed worker and pin it there
+        (the sticky affinity entry). Returns the worker id."""
+        with self._lock:
+            if self._closed:
+                raise EngineClosed("router is closed")
+            if sid in self._affinity:
+                raise ValueError(f"stream {sid!r} already open on this fleet")
+            worker = self._place_locked(sid)
+            worker.open_stream(sid, alpha=alpha)
+            self._affinity[sid] = worker.wid
+            self._alphas[sid] = float(alpha)
+            return worker.wid
+
+    def close_stream(self, sid: Hashable) -> None:
+        with self._lock:
+            wid = self._affinity.pop(sid, None)
+            self._alphas.pop(sid, None)
+            if wid is None:
+                raise KeyError(f"stream {sid!r} is not open on this fleet")
+            if wid not in self._dead:
+                self._by_wid[wid].close_stream(sid)
+
+    def stream_worker(self, sid: Hashable) -> Hashable:
+        """The affinity table entry for ``sid`` (KeyError when not open)."""
+        with self._lock:
+            return self._affinity[sid]
+
+    @property
+    def streams(self) -> int:
+        with self._lock:
+            return len(self._affinity)
+
+    # ------------------------------------------------------------- serving
+    def submit(
+        self,
+        frame,
+        stream_id: Optional[Hashable] = None,
+        deadline_ms: Optional[float] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ):
+        """Route one frame; returns the serving worker's Future.
+
+        Raises ``AdmissionError`` for malformed/non-finite frames,
+        ``KeyError`` for an unopened stream, :class:`FleetSaturated` when
+        the target worker's backlog is at the router's bound, and
+        :class:`WorkerDown` only when no live worker remains.
+        """
+        with self._lock:
+            if self._closed:
+                raise EngineClosed("router is closed")
+        if self.admission_checks:
+            frame = validate_frame(frame, stream_id=stream_id)
+        if stream_id is not None:
+            return self._submit_stream(
+                frame, stream_id, deadline_ms, block, timeout
+            )
+        return self._submit_stateless(frame, deadline_ms, block, timeout)
+
+    def _shed(self, stream_id, wid, depth) -> FleetSaturated:
+        with self._lock:
+            self._router_shed += 1
+        return FleetSaturated(stream_id, wid, depth, self.max_worker_queue)
+
+    def _submit_to(self, worker: Worker, frame, stream_id, deadline_ms,
+                   block, timeout):
+        """One guarded hand-off. Returns a Future, raises FleetSaturated,
+        re-raises caller errors, or raises ``WorkerDown`` after evacuating a
+        worker that proved dead/sick (the caller retries on the new pin)."""
+        depth = worker.queue_depth()
+        if depth >= self.max_worker_queue:
+            raise self._shed(stream_id, worker.wid, depth)
+        try:
+            fut = worker.submit(
+                frame, stream_id=stream_id, deadline_ms=deadline_ms,
+                block=block, timeout=timeout,
+            )
+        except queue.Full:
+            # lost the race with other submitters between the depth check
+            # and the hand-off; still shed structurally at the router
+            raise self._shed(stream_id, worker.wid, worker.queue_depth()) \
+                from None
+        except _CLIENT_ERRORS:
+            raise  # caller bug: no rebalance, original traceback
+        except (WorkerDown, EngineClosed) as exc:
+            self.fail_worker(worker.wid)
+            raise WorkerDown(worker.wid, "evacuated after death") from exc
+        except Exception as exc:
+            if self._health[worker.wid].record_failure():
+                # breaker just opened: a limping worker (every submit
+                # erroring) is evacuated like a dead one
+                self.fail_worker(worker.wid)
+                raise WorkerDown(
+                    worker.wid, "evacuated after repeated failures"
+                ) from exc
+            raise
+        self._health[worker.wid].record_success()
+        return fut
+
+    def _submit_stream(self, frame, stream_id, deadline_ms, block, timeout):
+        last: Optional[Exception] = None
+        # each failed pass evacuates a worker, so attempts are bounded
+        for _ in range(len(self.workers)):
+            with self._lock:
+                wid = self._affinity.get(stream_id)
+                if wid is None:
+                    raise KeyError(
+                        f"stream {stream_id!r} is not open on this fleet"
+                    )
+                worker = self._by_wid[wid]
+            try:
+                return self._submit_to(
+                    worker, frame, stream_id, deadline_ms, block, timeout
+                )
+            except WorkerDown as exc:
+                # the stream was re-pinned (cold) by fail_worker; retry on
+                # the survivor unless the fleet is gone
+                last = exc
+                if self.workers_alive == 0:
+                    raise
+        raise WorkerDown(None, "no surviving worker accepted the frame") \
+            from last
+
+    def _submit_stateless(self, frame, deadline_ms, block, timeout):
+        if self.temporal:
+            raise ValueError(
+                "temporal fleet: submit needs a stream_id (open_stream "
+                "first) — stateless frames have no carry to pin"
+            )
+        last: Optional[Exception] = None
+        for _ in range(len(self.workers)):
+            with self._lock:
+                alive = [w for w in self.workers if w.wid not in self._dead]
+                if not alive:
+                    raise WorkerDown(None, "no workers alive")
+                self._rr += 1
+                rot = self._rr % len(alive)
+            # least-loaded placement; the rotation breaks ties so an idle
+            # fleet spreads instead of dog-piling worker 0
+            order = alive[rot:] + alive[:rot]
+            worker = min(order, key=lambda w: w.queue_depth())
+            try:
+                return self._submit_to(
+                    worker, frame, None, deadline_ms, block, timeout
+                )
+            except WorkerDown as exc:
+                last = exc
+                if self.workers_alive == 0:
+                    raise
+        raise WorkerDown(None, "no surviving worker accepted the frame") \
+            from last
+
+    # -------------------------------------------------------------- health
+    def fail_worker(self, wid: Hashable) -> List[Tuple[Hashable, Hashable]]:
+        """Drain-and-quarantine one worker (idempotent). Returns the
+        ``[(sid, new_wid), ...]`` re-pins.
+
+        Order matters: (1) kill the worker first — intake stops and queued
+        futures fail with structured ``EngineClosed``, so no pack can still
+        be advancing carries underneath us; (2) quarantine its warm streams
+        through the packer's cold-restart path (counted in the worker's
+        ``carry_resets`` — a dead worker's carry is never copied off it);
+        (3) re-pin every victim stream cold onto its rendezvous survivor.
+        Survivors' streams never move (rendezvous property).
+        """
+        with self._lock:
+            if wid not in self._by_wid:
+                raise KeyError(f"unknown worker {wid!r}")
+            if wid in self._dead:
+                return []
+            self._dead.add(wid)
+            self._workers_lost += 1
+            victims = sorted(
+                (sid for sid, owner in self._affinity.items() if owner == wid),
+                key=repr,
+            )
+        worker = self._by_wid[wid]
+        try:
+            worker.kill()
+        except Exception:
+            pass  # already dead is fine; state is torn down best-effort
+        try:
+            warm = set(worker.warm_streams())
+        except Exception:
+            warm = set(victims)  # state unreadable: assume every carry lost
+        for sid in victims:
+            if sid in warm:
+                try:
+                    worker.quarantine(sid)
+                except Exception:
+                    pass  # the carry dies with the worker either way
+        moved: List[Tuple[Hashable, Hashable]] = []
+        with self._lock:
+            for sid in victims:
+                new_worker = self._place_locked(sid)
+                new_worker.open_stream(sid, self._alphas.get(sid, 0.0))
+                self._affinity[sid] = new_worker.wid
+                self._rebalanced += 1
+                if sid in warm:
+                    self._quarantined += 1
+                self.rebalance_log.append((sid, wid, new_worker.wid))
+                moved.append((sid, new_worker.wid))
+        return moved
+
+    def kill_worker(self, wid: Hashable) -> None:
+        """Chaos hook: crash one worker *without* telling the router — the
+        watchdog (or the submit path) must notice on its own."""
+        self._by_wid[wid].kill()
+
+    # ----------------------------------------------------------- telemetry
+    @property
+    def router_shed(self) -> int:
+        return self._router_shed
+
+    @property
+    def rebalanced_streams(self) -> int:
+        return self._rebalanced
+
+    @property
+    def quarantined_streams(self) -> int:
+        return self._quarantined
+
+    @property
+    def workers_lost(self) -> int:
+        return self._workers_lost
+
+    def stats(self):
+        """Fleet-wide :class:`~repro.fleet.stats.FleetStats` snapshot."""
+        from .stats import FleetStats
+
+        return FleetStats.collect(self)
+
+    # ------------------------------------------------------------ shutdown
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        ok = True
+        for w in self.workers:
+            if not self.is_dead(w.wid):
+                ok = w.flush(timeout=timeout) and ok
+        return ok
+
+    def close(self, timeout: float = 30.0) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if self._watchdog is not None:
+            self._watchdog.stop()
+        for w in self.workers:
+            if not self.is_dead(w.wid):
+                w.close(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

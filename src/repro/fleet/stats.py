@@ -1,0 +1,82 @@
+"""Fleet-wide telemetry: per-worker ``EngineStats`` rolled up exactly.
+
+The fleet's p50/p99 are **merged from the workers' latency reservoirs**
+(:meth:`repro.serving.EngineStats.merge` concatenates the per-worker sample
+windows and takes percentiles of the union) — never an average of
+per-worker percentiles, which understates the tail exactly when one worker
+is the problem. Counters sum; queue depths stay per-worker (the router's
+backpressure acts on individual backlogs, so the max matters, not the
+mean); the router's own counters (shed, rebalanced, quarantined, lost)
+ride along so one snapshot answers "what did the fleet absorb".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.serving import EngineStats
+
+__all__ = ["FleetStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetStats:
+    """One fleet-wide snapshot (see :meth:`collect`)."""
+
+    workers: int
+    workers_alive: int
+    streams: int
+    plan_hash: str
+    router_shed: int
+    rebalanced_streams: int
+    quarantined_streams: int
+    workers_lost: int
+    queue_depths: Tuple[int, ...]
+    per_worker: Tuple[EngineStats, ...]
+    merged: EngineStats
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        """Missed deadlines per completed-or-failed request, fleet-wide."""
+        done = self.merged.completed + self.merged.failed
+        return self.merged.deadline_misses / done if done else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        """Flat exporter form (bench rows / snapshots): fleet counters,
+        the merged engine counters under ``merged_*``, and the depth
+        extremes (per-worker reservoirs stay out — they are process-local
+        diagnostics, not snapshot material)."""
+        d = {
+            "workers": self.workers,
+            "workers_alive": self.workers_alive,
+            "streams": self.streams,
+            "router_shed": self.router_shed,
+            "rebalanced_streams": self.rebalanced_streams,
+            "quarantined_streams": self.quarantined_streams,
+            "workers_lost": self.workers_lost,
+            "deadline_miss_rate": self.deadline_miss_rate,
+            "max_queue_depth": max(self.queue_depths) if self.queue_depths else 0,
+        }
+        for k, v in self.merged.as_dict().items():
+            d[f"merged_{k}"] = v
+        return d
+
+    @classmethod
+    def collect(cls, router) -> "FleetStats":
+        """Snapshot ``router``'s fleet. Dead workers' stats still count —
+        their lifetime counters (frames they served before dying, their
+        carry resets) are part of the fleet's history."""
+        per = tuple(w.stats() for w in router.workers)
+        return cls(
+            workers=len(router.workers),
+            workers_alive=router.workers_alive,
+            streams=router.streams,
+            plan_hash=router.plan_hash,
+            router_shed=router.router_shed,
+            rebalanced_streams=router.rebalanced_streams,
+            quarantined_streams=router.quarantined_streams,
+            workers_lost=router.workers_lost,
+            queue_depths=tuple(w.queue_depth() for w in router.workers),
+            per_worker=per,
+            merged=EngineStats.merge(per),
+        )

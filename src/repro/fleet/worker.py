@@ -1,0 +1,256 @@
+"""The fleet worker protocol + the thread-hosted in-process worker.
+
+:class:`Worker` is the narrow surface the router and watchdog talk to — a
+handful of methods that all travel as plain data (a plan payload in, frames
+and futures out, counters back). Nothing in the protocol assumes the worker
+shares the router's process: a process-spanning backend (sockets + a frame
+codec) implements the same methods and slots in unchanged. Today's only
+implementation, :class:`LocalWorker`, hosts a full
+:class:`~repro.serving.AsyncFrameEngine` (dispatch + completion threads) in
+the router's process.
+
+A worker never resolves its own plan: it is *handed* a controller payload
+(``PlanController.payload()`` — a ``BGPlan.to_json`` dict plus the
+controller's ``plan_hash``), rebuilds the plan with ``BGPlan.from_json``,
+and refuses the payload when its own hash of the rebuilt plan disagrees —
+the worker-side half of the fleet's identical-recipe contract. Because
+equal plans share one compiled executable (``repro.plan._plan_executable``
+is keyed on plan equality), N local workers built from the same payload
+dispatch through the *same* jitted callable: plan distribution costs one
+compile, not N.
+
+Admission runs once, at the router (``validate_frame``), so workers are
+built with ``admission_checks=False`` — the protocol's equivalent of a
+trusted internal network behind a validating front door.
+"""
+from __future__ import annotations
+
+import abc
+import threading
+from typing import Dict, Hashable, List, Optional
+
+from repro.plan import BGPlan
+from repro.serving import AsyncFrameEngine, EngineStats
+from repro.video import MultiStreamPacker
+
+from .errors import PlanMismatch, WorkerDown
+
+__all__ = ["Worker", "LocalWorker"]
+
+
+class Worker(abc.ABC):
+    """What the router needs from a worker — implementable across a process
+    boundary (every argument and return value is plain data or a Future)."""
+
+    wid: Hashable
+
+    @property
+    @abc.abstractmethod
+    def plan_hash(self) -> str:
+        """Hash of the compiled dispatch recipe this worker serves."""
+
+    @property
+    @abc.abstractmethod
+    def temporal(self) -> bool:
+        """True when the worker carries per-stream temporal state."""
+
+    @abc.abstractmethod
+    def open_stream(self, sid: Hashable, alpha: float = 0.0) -> None:
+        """Create (cold) per-stream state for ``sid``."""
+
+    @abc.abstractmethod
+    def close_stream(self, sid: Hashable) -> None:
+        """Drop ``sid``'s state."""
+
+    @abc.abstractmethod
+    def submit(self, frame, stream_id=None, deadline_ms=None, block=True,
+               timeout=None):
+        """Queue one frame; returns a Future. Raises ``WorkerDown`` when the
+        worker is dead, ``queue.Full`` when its own queue is at capacity."""
+
+    @abc.abstractmethod
+    def quarantine(self, sid: Hashable) -> bool:
+        """Reset ``sid``'s temporal carry to cold; True if one was dropped."""
+
+    @abc.abstractmethod
+    def warm_streams(self) -> List[Hashable]:
+        """Streams currently holding a temporal carry."""
+
+    @abc.abstractmethod
+    def queue_depth(self) -> int:
+        """Undispatched backlog (the router's backpressure signal)."""
+
+    @abc.abstractmethod
+    def stats(self) -> EngineStats:
+        """Lifetime engine telemetry snapshot."""
+
+    @abc.abstractmethod
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until every accepted frame has resolved."""
+
+    @abc.abstractmethod
+    def healthy(self) -> bool:
+        """Liveness: False once the worker can no longer serve."""
+
+    @abc.abstractmethod
+    def kill(self) -> None:
+        """Abrupt death (the chaos hook): stop serving *now*; queued
+        futures fail structurally rather than hang."""
+
+    @abc.abstractmethod
+    def close(self, timeout: float = 30.0) -> None:
+        """Graceful shutdown: drain, then stop."""
+
+
+class LocalWorker(Worker):
+    """Thread-hosted worker: one ``AsyncFrameEngine`` (plus, for temporal
+    plans, its ``MultiStreamPacker``) behind the :class:`Worker` protocol.
+
+    ``streams_served`` counts accepted submissions per stream — the
+    router's affinity invariant ("a warm stream never runs on two workers
+    without an intervening quarantine") is asserted against it in tests.
+    """
+
+    def __init__(
+        self,
+        wid: Hashable,
+        payload: dict,
+        *,
+        mesh="auto",
+        max_batch: int = 32,
+        max_queue: int = 256,
+        batch_window_ms: float = 2.0,
+        watchdog_ms: Optional[float] = None,
+        fault_injector=None,
+        engine_kwargs: Optional[dict] = None,
+    ):
+        self.wid = wid
+        plan = BGPlan.from_json(payload["plan"], mesh=mesh)
+        want = payload.get("plan_hash")
+        if want is not None and plan.plan_hash() != want:
+            raise PlanMismatch(
+                f"worker {wid!r}: rebuilt plan hashes to "
+                f"{plan.plan_hash()}, controller payload claims {want!r}"
+            )
+        self.plan = plan
+        self._hash = plan.plan_hash()
+        kw = dict(
+            max_batch=max_batch,
+            max_queue=max_queue,
+            batch_window_ms=batch_window_ms,
+            watchdog_ms=watchdog_ms,
+            fault_injector=fault_injector,
+            admission_checks=False,  # the router validated at its front door
+        )
+        kw.update(engine_kwargs or {})
+        if plan.temporal:
+            self.packer = MultiStreamPacker(plan=plan)
+            self.engine = AsyncFrameEngine(packer=self.packer, **kw)
+        else:
+            self.packer = None
+            self.engine = AsyncFrameEngine(plan=plan, **kw)
+        self.streams_served: Dict[Hashable, int] = {}
+        self._alphas: Dict[Hashable, float] = {}
+        self._killed = False
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------------- plan
+    @property
+    def plan_hash(self) -> str:
+        return self._hash
+
+    @property
+    def temporal(self) -> bool:
+        return self.plan.temporal
+
+    # ------------------------------------------------------------- streams
+    def open_stream(self, sid: Hashable, alpha: float = 0.0) -> None:
+        with self._lock:
+            if self._killed:
+                raise WorkerDown(self.wid, "open_stream on a dead worker")
+            self._alphas[sid] = float(alpha)
+        if self.packer is not None:
+            with self.engine._packer_lock:
+                self.packer.open(sid, alpha=alpha)
+
+    def close_stream(self, sid: Hashable) -> None:
+        with self._lock:
+            self._alphas.pop(sid, None)
+        if self.packer is not None:
+            with self.engine._packer_lock:
+                self.packer.close(sid)
+
+    def quarantine(self, sid: Hashable) -> bool:
+        if self.packer is None:
+            return False
+        before = self.packer.carry_resets
+        # the engine's quarantine path: the packer's cold-restart machinery
+        # under the pack lock, counted in EngineStats.carry_resets
+        self.engine._quarantine([sid])
+        return self.packer.carry_resets > before
+
+    def warm_streams(self) -> List[Hashable]:
+        if self.packer is None:
+            return []
+        # dict iteration under the GIL; best-effort snapshot (the router
+        # only reads this after it has stopped routing to the worker)
+        return [
+            sid for sid, sess in list(self.packer.sessions.items())
+            if sess.carry is not None
+        ]
+
+    # ------------------------------------------------------------- serving
+    def submit(self, frame, stream_id=None, deadline_ms=None, block=True,
+               timeout=None):
+        if self._killed:
+            raise WorkerDown(self.wid, "submit on a dead worker")
+        fut = self.engine.submit(
+            frame, stream_id=stream_id, deadline_ms=deadline_ms,
+            block=block, timeout=timeout,
+        )
+        if stream_id is not None:
+            # counted only after the engine accepted the frame: the affinity
+            # invariant is about frames that could actually touch state
+            with self._lock:
+                self.streams_served[stream_id] = (
+                    self.streams_served.get(stream_id, 0) + 1
+                )
+        return fut
+
+    def queue_depth(self) -> int:
+        return self.engine._queue.qsize() + len(self.engine._held)
+
+    def stats(self) -> EngineStats:
+        return self.engine.stats()
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        return self.engine.flush(timeout=timeout)
+
+    # -------------------------------------------------------------- health
+    def healthy(self) -> bool:
+        return (
+            not self._killed
+            and self.engine._dispatcher.is_alive()
+            and self.engine._completer.is_alive()
+        )
+
+    def kill(self) -> None:
+        """Simulated crash: stop accepting immediately and give in-flight
+        work a fraction of a second to resolve; whatever is still queued
+        fails with structured ``EngineClosed`` (never a hanging future)."""
+        with self._lock:
+            if self._killed:
+                return
+            self._killed = True
+        self.engine.close(timeout=0.2)
+
+    def close(self, timeout: float = 30.0) -> None:
+        with self._lock:
+            self._killed = True
+        self.engine.close(timeout=timeout)
+
+    def __repr__(self):
+        return (
+            f"LocalWorker(wid={self.wid!r}, plan_hash={self._hash!r}, "
+            f"healthy={self.healthy()})"
+        )

@@ -26,6 +26,20 @@ Corruption tolerance: a missing, truncated, or garbage cache file is treated
 as empty (warn once) — a broken cache must degrade to the model, never take
 the service down. Writes are atomic (tmp + rename) so a crashed writer
 cannot corrupt a reader.
+
+The module doubles as the fleet operator's cache tool::
+
+    python -m repro.plan_cache inspect [path] [--json]
+    python -m repro.plan_cache merge OUT IN [IN ...]
+    python -m repro.plan_cache prune [path] --max-age-days N | --foreign
+
+``inspect`` prints every entry (key, backend/tile/mesh, measured time,
+hash, age); ``merge`` unions cache files — the controller-blessed file from
+``PlanController.bless`` or a sweep host merges into the fleet's shipped
+cache, same-key conflicts resolved fastest-measurement-first (ties to the
+newer recording); ``prune`` drops entries older than ``--max-age-days``
+and/or recorded under a different host fingerprint (``--foreign`` — foreign
+entries never match lookups here, they are dead weight in a shipped file).
 """
 from __future__ import annotations
 
@@ -35,7 +49,7 @@ import tempfile
 import threading
 import time
 import warnings
-from typing import Optional
+from typing import Dict, List, Optional, Sequence
 
 __all__ = [
     "PlanCache",
@@ -44,6 +58,8 @@ __all__ = [
     "default_cache_path",
     "get_default_cache",
     "set_default_cache",
+    "merge_caches",
+    "main",
     "CACHE_ENV_VAR",
     "CACHE_VERSION",
 ]
@@ -194,6 +210,45 @@ class PlanCache:
             self._entries = {}
             self._write()
 
+    def entries(self) -> Dict[str, dict]:
+        """A snapshot copy of every entry (CLI/merge consumption)."""
+        with self._lock:
+            return dict(self._load())
+
+    def prune(
+        self,
+        max_age_days: Optional[float] = None,
+        foreign: bool = False,
+        now: Optional[float] = None,
+    ) -> List[str]:
+        """Drop stale and/or foreign-host entries; returns removed keys.
+
+        ``max_age_days`` removes entries whose ``recorded`` stamp is older
+        (or unparseable — an entry of unknown age fails the age criterion);
+        ``foreign`` removes entries keyed under a different
+        :func:`host_fingerprint` (they can never match a lookup here).
+        At least one criterion is required.
+        """
+        if max_age_days is None and not foreign:
+            raise ValueError("prune needs max_age_days= and/or foreign=True")
+        fp = host_fingerprint() if foreign else None
+        now = time.time() if now is None else now
+        removed = []
+        with self._lock:
+            for key, ent in list(self._load().items()):
+                drop = False
+                if foreign:
+                    parts = key.split("|")
+                    drop = len(parts) < 2 or parts[1] != fp
+                if not drop and max_age_days is not None:
+                    drop = _entry_age_days(ent, now) > max_age_days
+                if drop:
+                    del self._entries[key]
+                    removed.append(key)
+            if removed:
+                self._write()
+        return removed
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._load())
@@ -222,3 +277,132 @@ def set_default_cache(cache: Optional[PlanCache]) -> Optional[PlanCache]:
         prev = _DEFAULT_CACHE
         _DEFAULT_CACHE = cache
         return prev
+
+
+# ------------------------------------------------------------------- tooling
+def _entry_age_days(ent: dict, now: float) -> float:
+    """Days since ``ent`` was recorded; +inf for missing/garbled stamps
+    (an entry of unknown age cannot pass an age criterion)."""
+    stamp = ent.get("recorded") if isinstance(ent, dict) else None
+    try:
+        recorded = time.mktime(time.strptime(stamp, "%Y-%m-%dT%H:%M:%S"))
+    except (TypeError, ValueError):
+        return float("inf")
+    return (now - recorded) / 86400.0
+
+
+def _better(a: dict, b: dict) -> dict:
+    """Conflict resolution for merge: fastest measurement wins (an
+    unmeasured entry loses to any measured one); ties go to the newer
+    recording (the ISO stamps sort lexicographically)."""
+    inf = float("inf")
+
+    def measured(e):
+        v = e.get("measured_us")
+        return v if isinstance(v, (int, float)) else inf
+
+    if measured(a) != measured(b):
+        return a if measured(a) < measured(b) else b
+    return a if str(a.get("recorded", "")) >= str(b.get("recorded", "")) else b
+
+
+def merge_caches(out_path: str, in_paths: Sequence[str]) -> PlanCache:
+    """Union the entries of ``in_paths`` into a cache file at ``out_path``
+    (which also participates when it already exists — merging into the
+    fleet's shipped cache is the normal flow). Returns the written cache."""
+    merged: Dict[str, dict] = {}
+    for path in [out_path, *in_paths]:
+        if path != out_path and not os.path.exists(os.path.expanduser(path)):
+            raise FileNotFoundError(path)
+        for key, ent in PlanCache(path).entries().items():
+            if not isinstance(ent, dict) or "plan" not in ent:
+                continue
+            merged[key] = _better(merged[key], ent) if key in merged else ent
+    out = PlanCache(out_path)
+    with out._lock:
+        out._entries = merged
+        out._write()
+    return out
+
+
+def _format_entry(key: str, ent: dict, now: float) -> str:
+    plan = ent.get("plan") if isinstance(ent, dict) else None
+    plan = plan if isinstance(plan, dict) else {}
+    measured = ent.get("measured_us")
+    age = _entry_age_days(ent, now)
+    return (
+        f"{key}\n"
+        f"    backend={plan.get('backend')} bt={plan.get('batch_tile')} "
+        f"mesh={plan.get('mesh_size')} temporal={int(bool(plan.get('temporal')))}"
+        f" hash={ent.get('plan_hash')}\n"
+        f"    measured_us="
+        f"{'-' if not isinstance(measured, (int, float)) else f'{measured:.1f}'}"
+        f" source={ent.get('source')} recorded={ent.get('recorded')}"
+        f" ({'?' if age == float('inf') else f'{age:.1f}'}d ago)"
+    )
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """``python -m repro.plan_cache`` — see the module docstring."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.plan_cache",
+        description="Inspect, merge, and prune measured-plan cache files.",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ins = sub.add_parser("inspect", help="print every entry of a cache file")
+    ins.add_argument("path", nargs="?", default=None,
+                     help="cache file (default: the process default path)")
+    ins.add_argument("--json", action="store_true", dest="as_json",
+                     help="dump raw entries as JSON")
+    mer = sub.add_parser(
+        "merge",
+        help="union cache files into OUT (fastest measurement wins per key)",
+    )
+    mer.add_argument("out", help="destination cache file")
+    mer.add_argument("inputs", nargs="+", help="source cache files")
+    pru = sub.add_parser("prune", help="drop stale and/or foreign entries")
+    pru.add_argument("path", nargs="?", default=None)
+    pru.add_argument("--max-age-days", type=float, default=None,
+                     help="drop entries recorded longer ago than this")
+    pru.add_argument("--foreign", action="store_true",
+                     help="drop entries keyed under a different host "
+                     "fingerprint")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "inspect":
+        cache = PlanCache(args.path)
+        entries = cache.entries()
+        if args.as_json:
+            print(json.dumps({"version": CACHE_VERSION, "entries": entries},
+                             indent=1, sort_keys=True))
+        else:
+            now = time.time()
+            print(f"# {cache.path}: {len(entries)} entr"
+                  f"{'y' if len(entries) == 1 else 'ies'}")
+            for key in sorted(entries):
+                print(_format_entry(key, entries[key], now))
+        return 0
+    if args.cmd == "merge":
+        out = merge_caches(args.out, args.inputs)
+        print(f"# merged {len(args.inputs)} file(s) -> {out.path}: "
+              f"{len(out)} entr{'y' if len(out) == 1 else 'ies'}")
+        return 0
+    # prune
+    cache = PlanCache(args.path)
+    try:
+        removed = cache.prune(max_age_days=args.max_age_days,
+                              foreign=args.foreign)
+    except ValueError as e:
+        ap.error(str(e))
+    for key in removed:
+        print(f"# pruned {key}")
+    print(f"# {cache.path}: removed {len(removed)}, kept {len(cache)}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -34,6 +34,18 @@ Every failure a client observes through a Future is a typed
 and the ``benchmarks/bench_bg_chaos.py`` CI soak. The synchronous engine
 stays guard-free on purpose — it is the simple, deterministic oracle the
 async front is equivalence-tested against.
+
+**Scaling out**: one ``AsyncFrameEngine`` is a single worker. The fleet
+layer (``repro.fleet``) fronts N of them behind a ``FleetRouter`` — sticky
+per-stream affinity (a temporal carry lives on exactly one worker),
+fleet-level admission at the router so workers run with
+``admission_checks=False``, bounded per-worker backpressure that sheds at
+the router before any engine queue can overflow, one controller-distributed
+``BGPlan`` per fleet (mixed recipes refused at construction), and
+drain-and-quarantine failover when a worker dies. ``EngineStats.merge``
+rolls per-worker snapshots into exact fleet percentiles (union of the
+latency reservoirs, never averaged percentiles); see the ``repro.fleet``
+package docstring for the full architecture.
 """
 from .async_engine import AsyncFrameEngine, AsyncFrameRequest, EngineStats
 from .engine import Request, ServeEngine, make_prefill, make_serve_step

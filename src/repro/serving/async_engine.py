@@ -91,7 +91,7 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from typing import Deque, Dict, Hashable, List, Optional
+from typing import Deque, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -133,6 +133,14 @@ class EngineStats:
     ``stats["key"]`` indexing is kept as a legacy shim for the former dict
     form; prefer attribute access. ``as_dict()`` feeds exporters (the
     ``BENCH_<ts>.json`` snapshot rows in benchmarks/bench_video_stream.py).
+
+    ``latency_samples`` carries the snapshot's sorted latency reservoir
+    (milliseconds, same window the percentiles were computed from) so
+    :meth:`merge` can aggregate fleets **exactly** — percentiles of the
+    concatenated samples — instead of averaging per-engine percentiles,
+    which understates the tail precisely when one engine is the outlier.
+    It is process-local diagnostic state: ``as_dict()`` leaves it out of
+    exporter rows.
     """
 
     submitted: int
@@ -150,6 +158,7 @@ class EngineStats:
     carry_resets: int = 0
     shed: int = 0
     watchdog_trips: int = 0
+    latency_samples: Tuple[float, ...] = ()
 
     def __getitem__(self, key: str):
         if key not in self.__dataclass_fields__:
@@ -157,7 +166,61 @@ class EngineStats:
         return getattr(self, key)
 
     def as_dict(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d.pop("latency_samples")
+        return d
+
+    @classmethod
+    def merge(cls, parts: Sequence["EngineStats"]) -> "EngineStats":
+        """Aggregate engine snapshots into one fleet-level snapshot.
+
+        Counters and depths sum; ``mean_batch`` is dispatch-weighted; the
+        percentiles are computed over the **union** of the parts' latency
+        reservoirs (exact, the whole point of carrying the samples). Parts
+        without samples (hand-built snapshots) fall back to a
+        completed-weighted average of their percentile fields — labelled
+        approximation, only ever used when there is nothing better.
+        """
+        parts = [p for p in parts if p is not None]
+        if not parts:
+            return cls(0, 0, 0, 0, 0, 0, 0.0, 0.0, 0.0)
+        samples = sorted(s for p in parts for s in p.latency_samples)
+
+        def _pct(q: float) -> float:
+            if samples:
+                return samples[min(int(q * len(samples)), len(samples) - 1)]
+            field = "latency_ms_p50" if q == 0.50 else "latency_ms_p99"
+            weights = [p.completed for p in parts]
+            total = sum(weights) or len(parts)
+            return sum(
+                getattr(p, field) * (w if sum(weights) else 1)
+                for p, w in zip(parts, weights)
+            ) / total
+
+        dispatches = sum(p.dispatches for p in parts)
+        mean_batch = (
+            sum(p.mean_batch * p.dispatches for p in parts) / dispatches
+            if dispatches
+            else 0.0
+        )
+        return cls(
+            submitted=sum(p.submitted for p in parts),
+            completed=sum(p.completed for p in parts),
+            dispatches=dispatches,
+            queue_depth=sum(p.queue_depth for p in parts),
+            inflight_depth=sum(p.inflight_depth for p in parts),
+            deadline_misses=sum(p.deadline_misses for p in parts),
+            mean_batch=mean_batch,
+            latency_ms_p50=_pct(0.50),
+            latency_ms_p99=_pct(0.99),
+            failed=sum(p.failed for p in parts),
+            retries=sum(p.retries for p in parts),
+            fallbacks=sum(p.fallbacks for p in parts),
+            carry_resets=sum(p.carry_resets for p in parts),
+            shed=sum(p.shed for p in parts),
+            watchdog_trips=sum(p.watchdog_trips for p in parts),
+            latency_samples=tuple(samples),
+        )
 
 
 @dataclasses.dataclass
@@ -414,6 +477,7 @@ class AsyncFrameEngine:
                 carry_resets=self._carry_resets,
                 shed=self._shed,
                 watchdog_trips=self._watchdog_trips,
+                latency_samples=tuple(x * 1e3 for x in lat),
             )
 
     def _count_retry(self) -> None:

@@ -1,0 +1,369 @@
+"""Fleet serving layer: affinity, plan distribution, failure containment,
+backpressure, and telemetry rollup.
+
+The load-bearing quartet:
+
+  * ``test_affinity_invariant_1k_frames`` — across 1000 frames a warm
+    stream's frames land on exactly one worker (``streams_served`` evidence
+    on every worker) and the affinity table never silently moves.
+  * ``test_worker_kill_quarantines_exactly_victim_streams`` — a worker
+    death resets precisely its own streams' carries; survivors' carry
+    objects are untouched (asserted by identity), and every migration in
+    ``rebalance_log`` was preceded by a quarantine.
+  * ``test_mixed_plan_hash_rejected_at_construction`` — a fleet whose
+    workers disagree on ``plan_hash`` never comes up.
+  * ``test_router_sheds_before_worker_queue_overflows`` — under a wedged
+    worker the router's ``max_worker_queue`` bound fires (structured
+    ``FleetSaturated``) while the worker's own request queue stays far
+    from capacity.
+
+Everything is scheduling-order independent: the watchdog thread is
+disabled (``health_interval_s=None``) and failures are injected or
+triggered synchronously.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core import BGConfig
+from repro.fleet import (
+    FleetRouter,
+    FleetSaturated,
+    FleetWatchdog,
+    LocalWorker,
+    PlanController,
+    PlanMismatch,
+)
+from repro.plan import plan_for
+from repro.plan_cache import PlanCache
+from repro.reliability import Fault, FaultInjector, FaultPlan
+from repro.serving import EngineStats
+
+CFG = BGConfig(r=4, sigma_s=4.0, sigma_r=60.0)
+H, W = 24, 32
+ALPHA = 0.6
+
+
+def _controller(streams_per_worker=4, **kw):
+    return PlanController(
+        cfg=CFG, height=H, width=W,
+        streams_per_worker=streams_per_worker, temporal=True,
+        sharded=False, **kw,
+    )
+
+
+def _fleet(n_workers=2, **kw):
+    kw.setdefault("health_interval_s", None)  # deterministic: no poller
+    kw.setdefault("worker_kwargs", dict(max_batch=8, batch_window_ms=1.0))
+    kw.setdefault("controller", _controller())
+    return FleetRouter(n_workers=n_workers, **kw)
+
+
+def _frame(seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 255.0, size=(H, W)).astype(np.float32)
+
+
+# --------------------------------------------------------------- affinity
+def test_affinity_invariant_1k_frames():
+    """1000 frames over 8 warm streams on 2 workers: every stream's frames
+    land on exactly the worker its affinity entry names, and nothing ever
+    migrates (no failures -> empty rebalance_log)."""
+    n_streams, rounds = 8, 125
+    frames = [_frame(s) for s in range(n_streams)]
+    with _fleet(n_workers=2) as router:
+        pins = {s: router.open_stream(s, alpha=ALPHA) for s in range(n_streams)}
+        assert set(pins.values()) <= {0, 1}
+        for t in range(rounds):
+            futs = [
+                router.submit(frames[s], stream_id=s)
+                for s in range(n_streams)
+            ]
+            for f in futs:
+                assert np.isfinite(np.asarray(f.result())).all()
+            # the pin never moves while the stream is warm
+            assert {s: router.stream_worker(s) for s in range(n_streams)} \
+                == pins
+        # per-worker accounting: each stream served by exactly its pin
+        for s in range(n_streams):
+            served_on = {
+                w.wid for w in router.workers
+                if w.streams_served.get(s, 0) > 0
+            }
+            assert served_on == {pins[s]}, (s, served_on, pins[s])
+            assert router.workers[pins[s]].streams_served[s] == rounds
+        assert router.rebalance_log == []
+        assert router.rebalanced_streams == 0
+        st = router.stats()
+        assert st.merged.completed == n_streams * rounds
+        assert st.merged.failed == 0
+
+
+def test_temporal_fleet_requires_stream_id():
+    with _fleet(n_workers=2) as router:
+        with pytest.raises(ValueError, match="stream_id"):
+            router.submit(_frame(0))
+        with pytest.raises(KeyError):
+            router.submit(_frame(0), stream_id="never-opened")
+
+
+# ------------------------------------------------------ failure containment
+def test_worker_kill_quarantines_exactly_victim_streams():
+    """Killing one worker resets exactly its streams (cold restart on the
+    survivor); surviving streams keep their carry objects untouched."""
+    n_streams = 6
+    frames = [_frame(100 + s) for s in range(n_streams)]
+    with _fleet(n_workers=2) as router:
+        pins = {s: router.open_stream(s, alpha=ALPHA) for s in range(n_streams)}
+        # warm every stream: two rounds so every carry is non-None
+        for _ in range(2):
+            for f in [router.submit(frames[s], stream_id=s)
+                      for s in range(n_streams)]:
+                f.result()
+        victim_wid = pins[0]
+        survivor = next(w for w in router.workers if w.wid != victim_wid)
+        victims = sorted(s for s, w in pins.items() if w == victim_wid)
+        keepers = sorted(s for s, w in pins.items() if w != victim_wid)
+        assert victims and keepers, "rendezvous split both ways"
+        kept_carries = {
+            s: survivor.packer.sessions[s].carry for s in keepers
+        }
+        assert all(c is not None for c in kept_carries.values())
+
+        moved = router.fail_worker(victim_wid)
+
+        # exactly the victim's streams moved, each preceded by a quarantine
+        assert sorted(s for s, _ in moved) == victims
+        assert router.quarantined_streams == len(victims)
+        assert router.rebalanced_streams == len(victims)
+        assert sorted(s for s, _, _ in router.rebalance_log) == victims
+        for s, old, new in router.rebalance_log:
+            assert old == victim_wid and new == survivor.wid
+        # victims restart cold on the survivor...
+        for s in victims:
+            assert router.stream_worker(s) == survivor.wid
+            assert survivor.packer.sessions[s].carry is None
+        # ...while survivors' carries are the very same objects
+        for s in keepers:
+            assert survivor.packer.sessions[s].carry is kept_carries[s]
+        # the fleet still serves every stream
+        for f in [router.submit(frames[s], stream_id=s)
+                  for s in range(n_streams)]:
+            assert np.isfinite(np.asarray(f.result())).all()
+        assert router.workers_alive == 1
+        # idempotent: a second failure report is a no-op
+        assert router.fail_worker(victim_wid) == []
+        assert router.workers_lost == 1
+
+
+def test_submit_path_detects_dead_worker_and_fails_over():
+    """A worker killed WITHOUT telling the router (chaos hook) is noticed
+    by the next submit, evacuated, and the frame retried on the survivor."""
+    with _fleet(n_workers=2) as router:
+        pins = {s: router.open_stream(s, alpha=ALPHA) for s in range(4)}
+        for f in [router.submit(_frame(s), stream_id=s) for s in range(4)]:
+            f.result()
+        victim_wid = pins[0]
+        router.kill_worker(victim_wid)  # router not told
+        # submits to the dead pin fail over transparently
+        for s in range(4):
+            assert np.isfinite(
+                np.asarray(router.submit(_frame(s), stream_id=s).result())
+            ).all()
+        assert router.is_dead(victim_wid)
+        assert router.workers_lost == 1
+        survivor_wid = next(
+            w.wid for w in router.workers if w.wid != victim_wid
+        )
+        assert all(
+            router.stream_worker(s) == survivor_wid for s in range(4)
+        )
+
+
+def test_watchdog_detects_silent_death():
+    """The watchdog's poll (run synchronously here) notices a dead worker
+    with no traffic flowing and triggers the same evacuation."""
+    with _fleet(n_workers=2) as router:
+        pins = {s: router.open_stream(s, alpha=ALPHA) for s in range(4)}
+        for f in [router.submit(_frame(s), stream_id=s) for s in range(4)]:
+            f.result()
+        victim_wid = pins[0]
+        router.kill_worker(victim_wid)
+        dog = FleetWatchdog(router, interval_s=60.0)  # won't tick on its own
+        try:
+            dog.poll()
+        finally:
+            dog.stop()
+        assert router.is_dead(victim_wid)
+        assert sorted(s for s, _, _ in router.rebalance_log) == sorted(
+            s for s, w in pins.items() if w == victim_wid
+        )
+
+
+# --------------------------------------------------------- plan distribution
+def test_mixed_plan_hash_rejected_at_construction():
+    ctrl_a = _controller()
+    ctrl_b = PlanController(
+        cfg=BGConfig(r=8, sigma_s=4.0, sigma_r=60.0), height=H, width=W,
+        streams_per_worker=4, temporal=True, sharded=False,
+    )
+    assert ctrl_a.plan_hash != ctrl_b.plan_hash
+    w0 = LocalWorker(0, ctrl_a.payload())
+    w1 = LocalWorker(1, ctrl_b.payload())
+    try:
+        with pytest.raises(PlanMismatch, match="mixed-plan"):
+            FleetRouter(workers=[w0, w1], health_interval_s=None)
+        # the controller's own verify refuses foreign workers too
+        with pytest.raises(PlanMismatch):
+            ctrl_a.verify([w0, w1])
+    finally:
+        w0.close(timeout=5.0)
+        w1.close(timeout=5.0)
+
+
+def test_worker_refuses_tampered_payload():
+    payload = _controller().payload()
+    payload["plan_hash"] = "0" * 16
+    with pytest.raises(PlanMismatch, match="rebuilt plan hashes"):
+        LocalWorker(0, payload)
+
+
+def test_workers_share_one_compiled_executable():
+    """Equal plans rebuilt from one payload share the jitted callable —
+    plan distribution costs one compile, not N."""
+    with _fleet(n_workers=3) as router:
+        w0, w1, w2 = router.workers
+        assert w0.plan == w1.plan == w2.plan
+        assert w0.plan.executable() is w1.plan.executable()
+        assert w1.plan.executable() is w2.plan.executable()
+
+
+def test_controller_bless_roundtrip(tmp_path):
+    """bless() writes the fleet's plan into a cache file that a later
+    plan_for resolves from (provenance flips to the cache)."""
+    path = str(tmp_path / "blessed.json")
+    ctrl = _controller(streams_per_worker=4)
+    key = ctrl.bless(path, measured_us=123.0)
+    pc = PlanCache(path)
+    ent = pc.lookup(key)
+    assert ent is not None and ent["source"] == "controller"
+    assert ent["plan_hash"] == ctrl.plan_hash
+    resolved = plan_for(
+        CFG, H, W, n_frames=4, temporal=True, sharded=False, cache=pc
+    )
+    assert resolved.plan_hash() == ctrl.plan_hash
+    assert resolved.provenance.startswith("cache")
+
+
+# ------------------------------------------------------------- backpressure
+def test_router_sheds_before_worker_queue_overflows():
+    """With a wedged worker, the router sheds at its own (small) bound with
+    structured FleetSaturated; the worker's far larger request queue never
+    fills, so submit can never wedge or raise raw queue.Full."""
+    engine_max_queue = 64
+    bound = 4
+    inj = FaultInjector(FaultPlan(faults=(
+        Fault(kind="hang_completion", delay_s=0.25, times=None),
+    )))
+    router = FleetRouter(
+        controller=_controller(streams_per_worker=1),
+        n_workers=1,
+        max_worker_queue=bound,
+        health_interval_s=None,
+        worker_kwargs=dict(
+            max_batch=1,
+            batch_window_ms=0.0,
+            max_queue=engine_max_queue,
+            fault_injector=inj,
+            engine_kwargs=dict(max_inflight=1),
+        ),
+    )
+    try:
+        router.open_stream(0, alpha=ALPHA)
+        worker = router.workers[0]
+        frame = _frame(7)
+        accepted, shed = [], 0
+        for _ in range(5 * bound):
+            try:
+                accepted.append(router.submit(frame, stream_id=0, block=False))
+            except FleetSaturated as exc:
+                shed += 1
+                assert exc.wid == worker.wid
+                assert exc.limit == bound and exc.depth >= bound
+            # the worker's own queue stays far from its capacity: the
+            # router's bound fired first every time
+            assert worker.queue_depth() <= bound + 1 < engine_max_queue
+        assert shed > 0 and router.router_shed == shed
+        assert len(accepted) >= bound  # the bound's worth was accepted
+        assert router.stats().router_shed == shed
+        for f in accepted:
+            assert np.isfinite(np.asarray(f.result(timeout=30.0))).all()
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------- telemetry
+def test_engine_stats_merge_exact_percentiles():
+    """Fleet percentiles come from the union of the latency reservoirs —
+    exactly the single-engine estimator applied to the concatenation, not
+    an average of per-engine percentiles."""
+    a = EngineStats(
+        submitted=10, completed=10, dispatches=5, queue_depth=1,
+        inflight_depth=0, deadline_misses=1, mean_batch=2.0,
+        latency_ms_p50=2.0, latency_ms_p99=4.0,
+        latency_samples=(1.0, 2.0, 3.0, 4.0),
+    )
+    b = EngineStats(
+        submitted=6, completed=6, dispatches=3, queue_depth=0,
+        inflight_depth=2, deadline_misses=0, mean_batch=1.0,
+        latency_ms_p50=100.0, latency_ms_p99=400.0, failed=2,
+        carry_resets=3, latency_samples=(100.0, 200.0, 400.0),
+    )
+    m = EngineStats.merge([a, b, None])
+    union = sorted(a.latency_samples + b.latency_samples)
+    assert m.latency_samples == tuple(union)
+    # same estimator as EngineStats.stats(): samples[min(int(q*n), n-1)]
+    n = len(union)
+    assert m.latency_ms_p50 == union[min(int(0.50 * n), n - 1)]
+    assert m.latency_ms_p99 == union[min(int(0.99 * n), n - 1)]
+    # the tail is dominated by the sick engine — never averaged away
+    assert m.latency_ms_p99 == 400.0
+    assert m.submitted == 16 and m.completed == 16 and m.failed == 2
+    assert m.dispatches == 8 and m.deadline_misses == 1
+    assert m.carry_resets == 3
+    assert m.mean_batch == pytest.approx((2.0 * 5 + 1.0 * 3) / 8)
+    # empty and sample-free fallbacks
+    empty = EngineStats.merge([])
+    assert empty.completed == 0 and empty.latency_ms_p99 == 0.0
+    bare = EngineStats.merge([
+        EngineStats(4, 4, 2, 0, 0, 0, 2.0, 10.0, 20.0),
+        EngineStats(12, 12, 6, 0, 0, 0, 2.0, 30.0, 40.0),
+    ])
+    assert bare.latency_ms_p50 == pytest.approx((10 * 4 + 30 * 12) / 16)
+    assert bare.latency_ms_p99 == pytest.approx((20 * 4 + 40 * 12) / 16)
+
+
+def test_fleet_stats_rollup():
+    with _fleet(n_workers=2) as router:
+        for s in range(4):
+            router.open_stream(s, alpha=ALPHA)
+        for _ in range(3):
+            for f in [router.submit(_frame(s), stream_id=s)
+                      for s in range(4)]:
+                f.result()
+        st = router.stats()
+        assert st.workers == 2 and st.workers_alive == 2
+        assert st.streams == 4 and st.plan_hash == router.plan_hash
+        assert st.merged.completed == 12
+        assert st.merged.completed == sum(
+            p.completed for p in st.per_worker
+        )
+        assert st.deadline_miss_rate == 0.0
+        d = st.as_dict()
+        assert d["merged_completed"] == 12
+        assert "merged_latency_samples" not in d
+        assert d["max_queue_depth"] == max(st.queue_depths)

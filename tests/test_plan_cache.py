@@ -147,3 +147,71 @@ def test_workload_key_separates_workloads():
     }
     assert len(keys) == 6
     assert all(host_fingerprint() in k for k in keys)
+
+
+# ------------------------------------------------------------------ CLI
+def _seed_cache(path, key, batch_tile=2, measured_us=None, recorded=None):
+    pc = PlanCache(str(path))
+    ent = pc.record(
+        key, BGPlan(cfg=CFG, backend="fused", batch_tile=batch_tile),
+        measured_us=measured_us,
+    )
+    if recorded is not None:  # backdate for age-based tests
+        import json as _json
+
+        data = _json.loads(path.read_text())
+        data["entries"][key]["recorded"] = recorded
+        path.write_text(_json.dumps(data))
+    return ent
+
+
+def test_cli_inspect(tmp_path, capsys):
+    from repro.plan_cache import main
+
+    p = tmp_path / "c.json"
+    _seed_cache(p, _key(), measured_us=88.5)
+    assert main(["inspect", str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "1 entry" in out and _key() in out
+    assert "backend=fused" in out and "measured_us=88.5" in out
+    # --json round-trips the raw envelope
+    assert main(["inspect", str(p), "--json"]) == 0
+    data = json.loads(capsys.readouterr().out)
+    assert data["version"] == CACHE_VERSION and _key() in data["entries"]
+
+
+def test_cli_merge_prefers_fastest_measurement(tmp_path, capsys):
+    from repro.plan_cache import main
+
+    a, b, out = tmp_path / "a.json", tmp_path / "b.json", tmp_path / "o.json"
+    _seed_cache(a, _key(), batch_tile=2, measured_us=120.0)
+    _seed_cache(b, _key(), batch_tile=4, measured_us=80.0)  # the winner
+    _seed_cache(b, _key(temporal=True), batch_tile=2, measured_us=55.0)
+    assert main(["merge", str(out), str(a), str(b)]) == 0
+    assert "2 entries" in capsys.readouterr().out
+    merged = PlanCache(str(out))
+    assert len(merged) == 2
+    won = merged.lookup(_key())
+    assert won["measured_us"] == 80.0 and won["plan"]["batch_tile"] == 4
+    # a missing input is a hard error, not a silent skip
+    with pytest.raises(FileNotFoundError):
+        main(["merge", str(out), str(tmp_path / "nope.json")])
+
+
+def test_cli_prune_by_age_and_foreign(tmp_path, capsys):
+    from repro.plan_cache import main
+
+    p = tmp_path / "c.json"
+    _seed_cache(p, _key(), recorded="2001-01-01T00:00:00")  # ancient
+    _seed_cache(p, _key(temporal=True))  # fresh
+    foreign_key = _key().replace(host_fingerprint(), "other-host-0cpu")
+    _seed_cache(p, foreign_key)
+    assert main(["prune", str(p), "--max-age-days", "30"]) == 0
+    assert "removed 1" in capsys.readouterr().out
+    assert main(["prune", str(p), "--foreign"]) == 0
+    assert "removed 1" in capsys.readouterr().out
+    kept = PlanCache(str(p)).entries()
+    assert set(kept) == {_key(temporal=True)}
+    # criterion-free prune is an argparse usage error
+    with pytest.raises(SystemExit):
+        main(["prune", str(p)])
