@@ -24,6 +24,17 @@ and gating pattern — as ``bench_bg_chaos``):
              shapes compile outside the timed window, same rule as every
              serving bench).
 
+A second soak, :func:`rolling_restart_soak`, runs the same claims against
+the **process-isolated** backend (``worker_backend="subprocess"``: each
+worker is an engine in a child process behind the ``repro.fleet.codec``
+socket protocol). Under sustained load, every worker in turn is SIGKILLed
+mid-burst via ``router.crash_worker`` — zero parent-side bookkeeping, the
+liveness machinery (``proc.poll`` + heartbeat freshness) must detect it
+cold — then returned to rotation with ``router.replace_worker``. Because
+subprocess workers ship periodic warm-carry snapshots to the router,
+the victims' warm streams must resume via **snapshot-restore** on the
+survivors (``FleetStats.restores``), not the cold quarantine path.
+
 Gated rows (hardware-independent, enforced in --quick CI):
 
   ``ratio/bg_fleet_kill_recovery``            recovery fps / clean fps,
@@ -34,7 +45,20 @@ Gated rows (hardware-independent, enforced in --quick CI):
   ``ratio/bg_fleet_no_silent_corruption``     1.0 iff every submitted
       frame resolved (result or structured error), no success carried
       NaN/Inf, exactly one worker was lost, and quarantines touched only
-      the victim's streams; floor 1.0.
+      the victim's streams — AND the rolling-restart soak's accounting
+      held: every rolling frame resolved, zero non-finite successes,
+      every SIGKILL detected, every slot replaced, and at least one warm
+      stream resumed via snapshot-restore; floor 1.0.
+  ``ratio/bg_fleet_rolling_restart_recovery`` post-rolling fps / clean
+      fps on the subprocess fleet, floor 0.8 — after every worker has
+      been SIGKILLed and replaced once, the fleet must serve identical
+      traffic at full throughput (a leaked socket, a wedged reconnect, a
+      replacement that never compiles, or an affinity table pointing at
+      corpses all show up here).
+  ``ratio/bg_fleet_rolling_deadline_ok``      1.0 iff the deadline-miss
+      rate under the generous soak budget stayed measured-zero across the
+      whole rolling soak (sustained load + crashes + restarts must not
+      wedge any request past a 30s budget); floor 1.0.
 
 Fleet telemetry (``FleetStats``: merged p99 via ``EngineStats.merge``,
 deadline-miss rate under the generous soak deadline — measured-zero, not
@@ -54,9 +78,15 @@ from repro.fleet import FleetRouter, PlanController
 # identical traffic in the same process, so the ratio only drops when the
 # kill left persistent fleet damage — not on slow hosts.
 KILL_RECOVERY_FLOOR = 0.8
+ROLLING_RECOVERY_FLOOR = 0.8
 # Generous per-frame budget: the soak asserts the miss *rate* is
 # measured-zero under load, not that the host is fast.
 SOAK_DEADLINE_MS = 30_000.0
+# Between warming the carries and the SIGKILL, the child's periodic
+# snapshot thread (0.25s interval) must get a shipping window — 3x the
+# interval keeps the pre-crash snapshots fresh without hiding a snapshot
+# path that only works when explicitly requested.
+SNAPSHOT_SETTLE_S = 0.75
 
 
 def _drive(target, arrivals, deadline_ms=SOAK_DEADLINE_MS):
@@ -224,9 +254,15 @@ def fleet_soak(
             if not np.isfinite(out).all():
                 kill_corrupt += 1
         # the watchdog may still be the detector when no submit hit the
-        # dead worker; give it its poll interval before asserting
-        deadline = time.monotonic() + 10.0
-        while router.workers_lost < 1 and time.monotonic() < deadline:
+        # dead worker, and fail_worker counts the loss *before* it finishes
+        # draining and re-pinning (idempotency marks the slot dead first) —
+        # so wait for the failover to LAND (every victim stream re-pinned),
+        # not merely for the loss to be counted
+        deadline = time.monotonic() + 30.0
+        while (
+            router.rebalanced_streams < len(victim_streams)
+            and time.monotonic() < deadline
+        ):
             time.sleep(0.02)
         res.update(
             kill_s=time.perf_counter() - t0,
@@ -298,6 +334,198 @@ def _single_engine_baseline(controller, n_streams, rounds, h, w, alpha, reps):
     return dt
 
 
+def rolling_restart_soak(
+    cfg: BGConfig | None = None,
+    *,
+    n_workers: int = 2,
+    n_streams: int = 4,
+    rounds: int = 3,
+    h: int = 32,
+    w: int = 48,
+    alpha: float = TEMPORAL_ALPHA,
+    reps: int = 2,
+    interpret=None,
+):
+    """Rolling-restart soak on the **subprocess** backend; returns a dict.
+
+    Phases: a timed clean window; then, for every worker in turn — re-warm
+    every carry, let the periodic snapshot thread ship them, SIGKILL the
+    worker's *process* mid-burst (``crash_worker``: no parent-side
+    bookkeeping), wait for the router's own detectors, return the slot to
+    rotation with ``replace_worker``, and re-warm the fresh child outside
+    any timed window; finally a timed recovery window on the fully
+    restarted fleet. Accounting: every frame (timed, burst, and warm-up)
+    must resolve; no success may carry NaN/Inf; every crash must be
+    detected and every slot replaced; at least one warm stream must resume
+    via snapshot-restore rather than cold quarantine.
+    """
+    if cfg is None:
+        cfg = BGConfig(r=4, sigma_s=4.0, sigma_r=60.0)
+    streams_per_worker = max(1, -(-n_streams // n_workers))
+    controller = PlanController(
+        cfg=cfg,
+        height=h,
+        width=w,
+        streams_per_worker=streams_per_worker,
+        temporal=True,
+        sharded=False,
+        interpret=interpret,
+    )
+    router = FleetRouter(
+        controller=controller,
+        n_workers=n_workers,
+        worker_backend="subprocess",
+        max_worker_queue=n_streams * (rounds + 2),
+        health_interval_s=0.1,
+        worker_kwargs=dict(max_batch=n_streams, batch_window_ms=50.0),
+    )
+    for s in range(n_streams):
+        router.open_stream(s, alpha=alpha)
+    n = n_streams * rounds
+    res = {
+        "n_workers": n_workers,
+        "n_streams": n_streams,
+        "rounds": rounds,
+        "frames": n,
+        "plan_hash": controller.plan_hash,
+    }
+    # warm/burst errors and corruption across the whole rolling phase —
+    # the soak's accounting is "every frame resolves somewhere", warm-up
+    # rounds included (they run against a fleet that should be healthy)
+    roll_errs: dict = {}
+    roll_corrupt = 0
+    roll_unresolved = 0
+
+    def _account(ok, errs, corrupt, submitted):
+        nonlocal roll_corrupt, roll_unresolved
+        roll_corrupt += corrupt
+        roll_unresolved += submitted - ok - sum(errs.values())
+        for k, v in errs.items():
+            roll_errs[k] = roll_errs.get(k, 0) + v
+
+    try:
+        # compile every pack shape in every child + warm every carry
+        _, ok, errs, cor = _drive(
+            router, _traffic(n_streams, 2, h, w, phase_seed=9_100_000)
+        )
+        router.flush()
+        _account(ok, errs, cor, n_streams * 2)
+
+        dt, ok, errs, corrupt = _timed_phase(
+            router, n_streams, rounds, h, w, base_seed=3_000_000, reps=reps
+        )
+        res.update(clean_s=dt, clean_ok=ok, clean_errors=errs)
+        roll_corrupt += corrupt
+
+        t0 = time.perf_counter()
+        wids = [w_.wid for w_ in router.workers]
+        detected = 0
+        for slot, wid in enumerate(wids):
+            # keep every carry warm, then give the child's snapshot thread
+            # its shipping window before the unannounced SIGKILL
+            _, ok, errs, cor = _drive(
+                router,
+                _traffic(n_streams, 1, h, w, phase_seed=4_000_000 + slot),
+            )
+            router.flush()
+            _account(ok, errs, cor, n_streams)
+            time.sleep(SNAPSHOT_SETTLE_S)
+
+            arrivals = _traffic(
+                n_streams, rounds, h, w, phase_seed=5_000_000 + 10_000 * slot
+            )
+            half = len(arrivals) // 2
+            futs, errs = [], {}
+            for sid, frame in arrivals[:half]:
+                try:
+                    futs.append(router.submit(
+                        frame, stream_id=sid, deadline_ms=SOAK_DEADLINE_MS
+                    ))
+                except Exception as exc:
+                    errs[type(exc).__name__] = (
+                        errs.get(type(exc).__name__, 0) + 1
+                    )
+            router.crash_worker(wid)  # SIGKILL the child, tell no one
+            for sid, frame in arrivals[half:]:
+                try:
+                    futs.append(router.submit(
+                        frame, stream_id=sid, deadline_ms=SOAK_DEADLINE_MS
+                    ))
+                except Exception as exc:
+                    errs[type(exc).__name__] = (
+                        errs.get(type(exc).__name__, 0) + 1
+                    )
+            ok = 0
+            cor = 0
+            for f in futs:
+                try:
+                    out = np.asarray(f.result(timeout=120.0))
+                except Exception as exc:
+                    errs[type(exc).__name__] = (
+                        errs.get(type(exc).__name__, 0) + 1
+                    )
+                    continue
+                ok += 1
+                if not np.isfinite(out).all():
+                    cor += 1
+            _account(ok, errs, cor, len(arrivals))
+
+            # detection is the backend's job: proc.poll via the watchdog,
+            # or a submit-path WorkerDown — either marks the slot dead
+            deadline = time.monotonic() + 30.0
+            while not router.is_dead(wid) and time.monotonic() < deadline:
+                time.sleep(0.02)
+            if router.is_dead(wid):
+                detected += 1
+                router.replace_worker(wid)
+            # fresh child: compile its pack shapes + re-warm outside any
+            # timed window (same rule as every serving bench)
+            _, ok, errs, cor = _drive(
+                router,
+                _traffic(n_streams, 2, h, w, phase_seed=6_000_000 + slot),
+            )
+            router.flush()
+            _account(ok, errs, cor, n_streams * 2)
+        res["rolling_s"] = time.perf_counter() - t0
+        res["crashes_detected"] = detected
+
+        dt, ok, errs, corrupt = _timed_phase(
+            router, n_streams, rounds, h, w, base_seed=7_000_000, reps=reps
+        )
+        res.update(recovery_s=dt, recovery_ok=ok, recovery_errors=errs)
+        roll_corrupt += corrupt
+        res["stats"] = router.stats()
+    finally:
+        router.close()
+
+    res["fps_clean"] = n / res["clean_s"]
+    res["fps_recovery"] = n / res["recovery_s"]
+    res["burst_errors"] = roll_errs
+    res["corrupt_served"] = roll_corrupt
+    stats = res["stats"]
+    res["restores"] = stats.restores
+    res["deadline_miss_rate"] = stats.deadline_miss_rate
+    # every frame of every phase resolved (timed windows fully ok, bursts
+    # ok-or-structured-error, no future lost), nothing non-finite served,
+    # every SIGKILL detected + replaced, and the victims' warm streams came
+    # back warm (snapshot-restore, not cold quarantine)
+    res["all_resolved"] = (
+        res["clean_ok"] == n * reps
+        and not res["clean_errors"]
+        and res["recovery_ok"] == n * reps
+        and not res["recovery_errors"]
+        and roll_unresolved == 0
+    )
+    res["rolling_ok"] = (
+        res["all_resolved"]
+        and res["corrupt_served"] == 0
+        and res["crashes_detected"] == len(wids)
+        and stats.worker_restarts == len(wids)
+        and stats.restores >= 1
+    )
+    return res
+
+
 def run(quick: bool = False):
     n_workers = 3 if quick else 4
     n_streams = 6 if quick else 8
@@ -307,10 +535,23 @@ def run(quick: bool = False):
     res = fleet_soak(
         n_workers=n_workers, n_streams=n_streams, rounds=rounds, reps=3
     )
+    # rolling-restart soak: smaller fleet — every worker is a child process
+    # (spawn + plan rebuild + pack compile per replacement), and the signal
+    # is failover correctness, not scale
+    rr_workers = 2 if quick else 3
+    rr_streams = 4 if quick else 6
+    rr_rounds = 3 if quick else 5
+    rr = rolling_restart_soak(
+        n_workers=rr_workers, n_streams=rr_streams, rounds=rr_rounds, reps=2
+    )
     n = res["frames"]
     tag = f"w{n_workers}_s{n_streams}_r{rounds}"
+    rr_tag = f"w{rr_workers}_s{rr_streams}_r{rr_rounds}"
     clean_ok = (
-        res["all_resolved"] and res["containment"] and res["corrupt_served"] == 0
+        res["all_resolved"]
+        and res["containment"]
+        and res["corrupt_served"] == 0
+        and rr["rolling_ok"]
     )
     rows = [
         (
@@ -343,10 +584,46 @@ def run(quick: bool = False):
             "ratio/bg_fleet_no_silent_corruption",
             1.0 if clean_ok else 0.0,
             f"floor=1.0 every frame resolved + no non-finite success + "
-            f"quarantine contained to the victim's streams "
-            f"(corrupt_served={res['corrupt_served']}, "
+            f"quarantine contained to the victim's streams + rolling soak "
+            f"clean (corrupt_served={res['corrupt_served']}, "
             f"all_resolved={res['all_resolved']}, "
-            f"containment={res['containment']})",
+            f"containment={res['containment']}, "
+            f"rolling_ok={rr['rolling_ok']})",
+        ),
+        (
+            f"bg_fleet/rolling_clean_{rr_tag}",
+            rr["clean_s"] / rr["frames"] * 1e6,
+            f"fps={rr['fps_clean']:.0f} subprocess backend, "
+            f"{rr_workers} child-process workers all alive",
+        ),
+        (
+            f"bg_fleet/rolling_restarts_{rr_tag}",
+            rr["rolling_s"] * 1e6 / max(1, rr_workers),
+            f"per-restart wall clock: SIGKILL mid-burst -> detect -> "
+            f"replace -> re-warm, x{rr_workers} workers in turn "
+            f"(burst_errors={rr['burst_errors']}, "
+            f"restores={rr['restores']})",
+        ),
+        (
+            f"bg_fleet/rolling_recovery_{rr_tag}",
+            rr["recovery_s"] / rr["frames"] * 1e6,
+            f"fps={rr['fps_recovery']:.0f} after every worker was "
+            f"SIGKILLed and replaced once",
+        ),
+        (
+            "ratio/bg_fleet_rolling_restart_recovery",
+            rr["fps_recovery"] / rr["fps_clean"],
+            f"floor={ROLLING_RECOVERY_FLOOR} post-rolling/clean sustained "
+            f"fps on identical traffic, subprocess backend — after "
+            f"{rr_workers} SIGKILL+replace cycles the fleet must be whole "
+            f"(no leaked transports, no wedged slot, no cold affinity)",
+        ),
+        (
+            "ratio/bg_fleet_rolling_deadline_ok",
+            1.0 if rr["deadline_miss_rate"] == 0.0 else 0.0,
+            f"floor=1.0 deadline-miss rate measured-zero under the "
+            f"{SOAK_DEADLINE_MS:.0f}ms soak budget across crashes and "
+            f"restarts (rate={rr['deadline_miss_rate']:.6f})",
         ),
     ]
     if "single_s" in res:
@@ -394,6 +671,32 @@ def run(quick: bool = False):
                 f"bg_fleet/stats_{name}_{tag}",
                 float(value),
                 f"{unit} (fleet.FleetStats)",
+            )
+        )
+    rr_stats = rr["stats"]
+    for name, value, unit in (
+        ("restores", float(rr_stats.restores),
+         "count — warm carries resumed from shipped snapshots on failover "
+         "(these streams paid zero cold warm-ups for their worker's death)"),
+        ("restore_staleness_p99", rr_stats.restore_staleness_p99 * 1e3,
+         "ms — p99 snapshot age at restore time (bounded by the router's "
+         "restore_max_age_s; stale snapshots fall back to quarantine)"),
+        ("quarantined_streams", float(rr_stats.quarantined_streams),
+         "count — cold fallbacks (no valid snapshot at failover)"),
+        ("reconnects", float(rr_stats.reconnects),
+         "count — child transport reconnects (0 here: SIGKILLed children "
+         "never reconnect, they are replaced; nonzero means torn wire)"),
+        ("worker_restarts", float(rr_stats.worker_restarts),
+         "count — slots returned to rotation via replace_worker"),
+        ("deadline_miss_rate", rr_stats.deadline_miss_rate,
+         f"rate under the {SOAK_DEADLINE_MS:.0f}ms budget, gated at "
+         f"measured-zero by ratio/bg_fleet_rolling_deadline_ok"),
+    ):
+        rows.append(
+            (
+                f"bg_fleet/rolling_stats_{name}_{rr_tag}",
+                float(value),
+                f"{unit} (fleet.FleetStats, subprocess backend)",
             )
         )
     return rows

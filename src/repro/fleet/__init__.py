@@ -3,10 +3,14 @@
 The paper's pipeline never stalls because every stage is sized for
 line-rate; the serving-side analog at fleet scale is a router that keeps N
 :class:`~repro.serving.AsyncFrameEngine` workers fed without ever moving a
-warm temporal stream or letting one slow worker back the fleet up. Workers
-are thread-hosted in-process today, but the :class:`~repro.fleet.worker.
-Worker` protocol is plain-data-in/Future-out, so a process-spanning backend
-slots in without touching the router.
+warm temporal stream or letting one slow worker back the fleet up. Two
+worker backends implement the plain-data-in/Future-out
+:class:`~repro.fleet.worker.Worker` protocol: thread-hosted
+:class:`LocalWorker` (engine in the router's process) and process-isolated
+:class:`SubprocessWorker` (engine in a child process behind a
+length-prefixed socket codec — ``repro.fleet.codec`` / ``repro.fleet.
+remote`` — with heartbeats, bounded reconnect, and periodic warm-carry
+snapshots shipped back to the router).
 
 Request path::
 
@@ -37,35 +41,71 @@ the fleet costs one compile. Mixed-hash fleets are refused at construction
 geometries.
 
 Failure semantics: worker death is detected three ways (the
-:class:`FleetWatchdog` liveness poller, submit-path ``WorkerDown``/
+:class:`FleetWatchdog` liveness poller — for subprocess workers backed by
+``proc.poll()`` + heartbeat freshness — submit-path ``WorkerDown``/
 ``EngineClosed``, or a tripped per-worker :class:`WorkerHealth` breaker)
-and always funnels into ``fail_worker``'s drain-and-quarantine: kill the
-worker (its queued futures fail with structured ``EngineClosed``),
-reset its warm streams through the existing
-``MultiStreamPacker.quarantine`` cold-restart path, re-pin them cold onto
-rendezvous survivors. A worker loss degrades exactly its own streams, for
-exactly one EMA warm-up each — never a corrupt carry, never a fleet-wide
-outage. ``benchmarks/bench_bg_fleet.py`` soaks all of this (clean phase +
-worker-kill phase) and gates recovery throughput and zero silent
-corruption in CI.
+and always funnels into ``fail_worker``: kill the worker (its queued
+futures fail structurally), then for each victim stream either **restore**
+its most recent warm-carry snapshot onto the rendezvous survivor
+(all-or-nothing, same plan hash, age <= ``restore_max_age_s``) or fall
+back to the cold quarantine re-pin. ``replace_worker`` returns a dead slot
+to rotation (the rolling-restart lever). ``benchmarks/bench_bg_fleet.py``
+soaks all of this (clean + kill + rolling-restart phases) and gates
+recovery throughput and zero silent corruption in CI.
+
+Failure-mode matrix (backend x failure -> detection -> stream outcome)::
+
+    backend      failure                  detected by            victim streams
+    ───────────  ───────────────────────  ─────────────────────  ──────────────────
+    LocalWorker  kill()/thread death      watchdog healthy()     cold quarantine
+                                          or submit WorkerDown   (snapshots=True:
+                                                                 live-read restore)
+    LocalWorker  corrupt carry (NaN/Inf)  finite-guard flags     quarantine on the
+                 — worker stays up        at completion          same worker (PR 6)
+    Subprocess   SIGKILL / OOM / segv     proc.poll() (instant)  snapshot-restore
+                 of the child process     + pending sweep        onto survivor;
+                                                                 stale/missing ->
+                                                                 cold quarantine
+    Subprocess   wedged child (alive,     heartbeat staleness    same as SIGKILL
+                 not serving)             (heartbeat_timeout_s)  (carries of a hung
+                                          + per-RPC timeouts     child are suspect)
+    Subprocess   torn/corrupt/dropped     codec CRC + caps ->    none — in-flight
+                 wire messages            CodecError; submit     frames fail with
+                                          sweep; bounded child   WorkerDown, child
+                                          reconnect              reconnects, carries
+                                                                 survive in-process
+    Subprocess   foreign plan-hash        stamped hash checked   frame refused with
+                 frame/snapshot           on submit + restore    PlanMismatch; no
+                                                                 cross-geometry EMA
 
 Telemetry: :class:`FleetStats` merges per-worker ``EngineStats`` exactly
 (concatenated latency reservoirs, summed counters — see
 ``EngineStats.merge``) and adds the router's shed/rebalance/quarantine
-counters.
+counters plus the PR-9 ``restores`` / ``restore_staleness_p99`` /
+``reconnects`` / ``worker_restarts``.
 """
 from .controller import PlanController
-from .errors import FleetError, FleetSaturated, PlanMismatch, WorkerDown
+from .errors import (
+    CodecError,
+    ConnectionClosed,
+    FleetError,
+    FleetSaturated,
+    PlanMismatch,
+    WorkerDown,
+)
 from .health import FleetWatchdog, WorkerHealth
+from .remote import SubprocessWorker
 from .router import FleetRouter
 from .stats import FleetStats
-from .worker import LocalWorker, Worker
+from .worker import CarrySnapshot, LocalWorker, Worker
 
 __all__ = [
     "FleetRouter",
     "PlanController",
     "Worker",
     "LocalWorker",
+    "SubprocessWorker",
+    "CarrySnapshot",
     "FleetWatchdog",
     "WorkerHealth",
     "FleetStats",
@@ -73,4 +113,6 @@ __all__ = [
     "FleetSaturated",
     "WorkerDown",
     "PlanMismatch",
+    "CodecError",
+    "ConnectionClosed",
 ]

@@ -1,0 +1,236 @@
+"""Length-prefixed binary frame codec for the process-spanning worker RPC.
+
+The :class:`~repro.fleet.worker.Worker` protocol was designed so every
+argument travels as plain data; this module is the wire form of that
+design. One message =
+
+    ``[preamble 24 B][header JSON <= 1 MiB][payload <= 1 GiB]``
+
+with a fixed preamble::
+
+    offset  size  field
+         0     4  magic  b"BGF1"
+         4     1  format version (1)
+         5     1  message type (see MSG_TYPES)
+         6     2  reserved (zero)
+         8     4  header length   (big-endian u32)
+        12     8  payload length  (big-endian u64)
+        20     4  CRC32 of preamble[0:20] + header + payload
+
+The header is UTF-8 JSON carrying the plain-data fields (``rid``, stream
+id, frame geometry/dtype via :func:`array_header`, the plan hash); the
+payload is the raw C-order frame/carry bytes — nothing on the wire is
+pickled, so a corrupt or adversarial peer can at worst produce a
+:class:`CodecError`, never code execution or an unbounded allocation
+(both length fields are hard-capped *before* any read or allocation).
+
+Validation contract (the "never a hang" half of ISSUE 9's tentpole):
+
+  * truncated preamble/header/payload -> :class:`CodecError`
+  * bad magic / unknown version / unknown message type -> :class:`CodecError`
+  * flipped bit anywhere in the message -> :class:`CodecError` (the CRC
+    covers the preamble's type/length fields too, so a flip that lands on
+    another *valid* type byte still cannot decode as the wrong message)
+  * length field beyond the cap -> :class:`CodecError` before allocation
+  * clean EOF *between* messages -> :class:`ConnectionClosed` (the one
+    non-error close signal, so a graceful peer shutdown is distinguishable
+    from a torn frame)
+
+Array round-trip: :func:`array_header` + ``ndarray.tobytes()`` on the send
+side, :func:`decode_array` on the receive side (dtype/shape/byte-count all
+re-validated). ``tests/test_fleet_codec.py`` fuzzes arbitrary geometries,
+dtypes, truncation points, and bit flips against this contract.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from .errors import CodecError, ConnectionClosed
+
+__all__ = [
+    "MSG_TYPES",
+    "MAX_HEADER_BYTES",
+    "MAX_PAYLOAD_BYTES",
+    "encode",
+    "decode",
+    "read_message",
+    "array_header",
+    "decode_array",
+]
+
+MAGIC = b"BGF1"
+VERSION = 1
+_PREAMBLE = struct.Struct(">4sBBHIQI")  # magic ver type reserved hlen plen crc
+PREAMBLE_BYTES = _PREAMBLE.size
+
+# Hard caps checked BEFORE any allocation: a flipped bit in a length field
+# must produce a structured error, not a 2**60-byte allocation or a read
+# that never completes.
+MAX_HEADER_BYTES = 1 << 20
+MAX_PAYLOAD_BYTES = 1 << 30
+
+# Message types. Values are the wire bytes; names are what the transport
+# layers (SubprocessWorker / remote_worker) dispatch on.
+MSG_TYPES: Dict[str, int] = {
+    "hello": 1,       # child -> parent, on every (re)connect
+    "plan": 2,        # parent -> child: controller payload + engine config
+    "ready": 3,       # child -> parent: plan rebuilt, hash enclosed
+    "submit": 4,      # parent -> child: one frame (payload = frame bytes)
+    "result": 5,      # child -> parent: one denoised frame
+    "error": 6,       # child -> parent: structured failure (typed)
+    "call": 7,        # parent -> child: sync control RPC (op in header)
+    "ack": 8,         # child -> parent: sync RPC response
+    "heartbeat": 9,   # child -> parent: liveness + queue depth + stats
+    "snapshot": 10,   # child -> parent: one stream's warm-carry snapshot
+    "restore": 11,    # parent -> child: restore a carry (payload = bytes)
+    "shutdown": 12,   # parent -> child: graceful drain-and-exit
+}
+_TYPE_NAMES = {v: k for k, v in MSG_TYPES.items()}
+
+# dtypes allowed on the wire: everything the serving stack actually ships
+# (float frames, quantized uint8 outputs, float32 carries) plus the common
+# numeric types so the codec is reusable. Object/void dtypes are refused —
+# they would deserialize through pickle, which this codec exists to avoid.
+_WIRE_KINDS = frozenset("biuf")
+
+
+def encode(msg_type: str, header: dict, payload: bytes = b"") -> bytes:
+    """Serialize one message. ``header`` must be JSON-plain data."""
+    try:
+        mt = MSG_TYPES[msg_type]
+    except KeyError:
+        raise CodecError(f"unknown message type {msg_type!r}") from None
+    hdr = json.dumps(header, sort_keys=True, separators=(",", ":")).encode()
+    if len(hdr) > MAX_HEADER_BYTES:
+        raise CodecError(f"header too large: {len(hdr)} bytes")
+    if len(payload) > MAX_PAYLOAD_BYTES:
+        raise CodecError(f"payload too large: {len(payload)} bytes")
+    pre = _PREAMBLE.pack(MAGIC, VERSION, mt, 0, len(hdr), len(payload), 0)
+    crc = zlib.crc32(payload, zlib.crc32(hdr, zlib.crc32(pre[:20])))
+    return (
+        _PREAMBLE.pack(
+            MAGIC, VERSION, mt, 0, len(hdr), len(payload), crc & 0xFFFFFFFF
+        )
+        + hdr
+        + payload
+    )
+
+
+def _parse_preamble(raw: bytes) -> Tuple[str, int, int, int]:
+    magic, ver, mt, _res, hlen, plen, crc = _PREAMBLE.unpack(raw)
+    if magic != MAGIC:
+        raise CodecError(f"bad magic {magic!r}")
+    if ver != VERSION:
+        raise CodecError(f"unknown codec version {ver}")
+    name = _TYPE_NAMES.get(mt)
+    if name is None:
+        raise CodecError(f"unknown message type byte {mt}")
+    if hlen > MAX_HEADER_BYTES:
+        raise CodecError(f"header length {hlen} exceeds cap")
+    if plen > MAX_PAYLOAD_BYTES:
+        raise CodecError(f"payload length {plen} exceeds cap")
+    return name, hlen, plen, crc
+
+
+def _finish(name: str, pre: bytes, hdr: bytes, payload: bytes, crc: int):
+    calc = zlib.crc32(payload, zlib.crc32(hdr, zlib.crc32(pre[:20])))
+    if (calc & 0xFFFFFFFF) != crc:
+        raise CodecError(f"CRC mismatch on {name!r} message")
+    try:
+        header = json.loads(hdr.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as exc:
+        raise CodecError(f"undecodable header on {name!r}: {exc}") from None
+    if not isinstance(header, dict):
+        raise CodecError(f"header must be a JSON object, got {type(header)}")
+    return name, header, payload
+
+
+def decode(data: bytes) -> Tuple[str, dict, bytes]:
+    """Decode exactly one message from ``data`` (tests/fuzzing entry)."""
+    if len(data) < PREAMBLE_BYTES:
+        raise CodecError(
+            f"truncated preamble: {len(data)} < {PREAMBLE_BYTES} bytes"
+        )
+    name, hlen, plen, crc = _parse_preamble(data[:PREAMBLE_BYTES])
+    end = PREAMBLE_BYTES + hlen + plen
+    if len(data) < end:
+        raise CodecError(f"truncated {name!r} message: {len(data)} < {end}")
+    hdr = data[PREAMBLE_BYTES:PREAMBLE_BYTES + hlen]
+    payload = data[PREAMBLE_BYTES + hlen:end]
+    return _finish(name, data[:PREAMBLE_BYTES], hdr, payload, crc)
+
+
+def read_message(recv: Callable[[int], bytes]) -> Tuple[str, dict, bytes]:
+    """Read one message from ``recv(n) -> up-to-n-bytes`` (a socket's
+    ``recv``). EOF at a message boundary raises :class:`ConnectionClosed`
+    (clean close); EOF or a timeout mid-message raises :class:`CodecError`
+    (torn frame). A ``socket.timeout`` before any byte arrives propagates
+    unchanged — idle is the caller's policy decision, not a codec error."""
+
+    def _exact(n: int, mid: bool) -> bytes:
+        buf = bytearray()
+        while len(buf) < n:
+            try:
+                chunk = recv(n - len(buf))
+            except TimeoutError:
+                if not mid and not buf:
+                    raise  # idle at a boundary: caller decides
+                raise CodecError(
+                    f"stalled mid-message after {len(buf)}/{n} bytes"
+                ) from None
+            if not chunk:
+                if not mid and not buf:
+                    raise ConnectionClosed("peer closed between messages")
+                raise CodecError(
+                    f"truncated: EOF after {len(buf)}/{n} bytes"
+                )
+            buf += chunk
+            mid = True
+        return bytes(buf)
+
+    raw = _exact(PREAMBLE_BYTES, mid=False)
+    name, hlen, plen, crc = _parse_preamble(raw)
+    hdr = _exact(hlen, mid=True) if hlen else b""
+    payload = _exact(plen, mid=True) if plen else b""
+    return _finish(name, raw, hdr, payload, crc)
+
+
+# ----------------------------------------------------------------- arrays
+def array_header(arr: np.ndarray) -> dict:
+    """The geometry/dtype header fields for one array payload.
+
+    ``np.asarray``, not ``ascontiguousarray``: the latter silently promotes
+    0-d arrays to shape ``(1,)``, and the byte order the header describes is
+    whatever ``tobytes()`` emits — C order — regardless of the array's
+    in-memory layout."""
+    arr = np.asarray(arr)
+    if arr.dtype.kind not in _WIRE_KINDS:
+        raise CodecError(f"dtype {arr.dtype} not allowed on the wire")
+    return {"shape": list(arr.shape), "dtype": arr.dtype.str}
+
+
+def decode_array(header: dict, payload: bytes) -> np.ndarray:
+    """Rebuild the array an :func:`array_header` + ``tobytes()`` pair
+    shipped, re-validating geometry, dtype, and byte count."""
+    try:
+        shape = tuple(int(s) for s in header["shape"])
+        dtype = np.dtype(header["dtype"])
+    except (KeyError, TypeError, ValueError) as exc:
+        raise CodecError(f"bad array header: {exc}") from None
+    if dtype.kind not in _WIRE_KINDS:
+        raise CodecError(f"dtype {dtype} not allowed on the wire")
+    if any(s < 0 for s in shape):
+        raise CodecError(f"negative dimension in shape {shape}")
+    want = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize if shape \
+        else dtype.itemsize
+    if want != len(payload):
+        raise CodecError(
+            f"payload is {len(payload)} bytes but shape {shape} dtype "
+            f"{dtype} needs {want}"
+        )
+    return np.frombuffer(payload, dtype=dtype).reshape(shape).copy()

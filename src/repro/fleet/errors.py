@@ -11,7 +11,14 @@ from __future__ import annotations
 
 from repro.reliability.errors import ReliabilityError
 
-__all__ = ["FleetError", "FleetSaturated", "WorkerDown", "PlanMismatch"]
+__all__ = [
+    "FleetError",
+    "FleetSaturated",
+    "WorkerDown",
+    "PlanMismatch",
+    "CodecError",
+    "ConnectionClosed",
+]
 
 
 class FleetError(ReliabilityError):
@@ -54,3 +61,18 @@ class PlanMismatch(ValueError):
     produced under one dispatch geometry are not interchangeable with
     another's, so a mixed fleet could corrupt streams on rebalance — refused
     at construction, like any other caller bug."""
+
+
+class CodecError(FleetError):
+    """A wire message failed validation: truncated, bad magic/version,
+    CRC mismatch, a length field past the hard cap, or an array header
+    whose geometry disagrees with its payload byte count. The transport
+    treats the connection as poisoned (framing is desynchronized after any
+    torn message) and resets it; the failure surfaces as a structured
+    :class:`WorkerDown`, never a hang."""
+
+
+class ConnectionClosed(FleetError):
+    """The peer closed the socket cleanly *between* messages — the one
+    close signal that is not a torn frame. Graceful child exit lands here;
+    everything mid-message lands in :class:`CodecError`."""

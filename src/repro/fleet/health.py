@@ -14,14 +14,22 @@ Two failure detectors, built on :mod:`repro.reliability.retry`:
     router's failure handling is idempotent, so the watchdog and the
     submit-path detector racing on the same death is harmless.
 
-Failure semantics (what ``fail_worker`` guarantees): the victim's warm
-streams are reset through the existing ``MultiStreamPacker.quarantine``
-cold-restart path (a carry that lived on a dead worker is *gone*, never
-copied — degraded quality for one warm-up, never a corrupt or stale EMA)
-and re-pinned to surviving workers via the same rendezvous placement,
-where they re-warm through the standard first-frame effective-alpha-0
-machinery. A worker loss therefore degrades exactly its own streams, for
-exactly one warm-up each.
+Failure semantics (what ``fail_worker`` guarantees): each of the victim's
+warm streams is re-pinned to its rendezvous survivor and either
+**snapshot-restored** — the worker's most recent shipped warm-carry
+snapshot (see ``repro.fleet.remote``; ``LocalWorker(snapshots=True)`` for
+the thread backend) is installed all-or-nothing when its plan hash matches
+and its age is within the router's ``restore_max_age_s`` — or, when no
+valid snapshot exists, reset through the ``MultiStreamPacker.quarantine``
+cold-restart path (degraded quality for one warm-up, never a corrupt or
+stale EMA; the carry *on the dead worker* is never read after death for
+thread backends without snapshots). A worker loss therefore degrades at
+most its own streams, each by at most one warm-up — zero for streams that
+restore.
+
+For process-isolated workers, ``worker.healthy()`` folds in child-process
+liveness (``proc.poll()``) and heartbeat freshness, so this same poller
+detects SIGKILLed and wedged worker *processes* with no new machinery.
 """
 from __future__ import annotations
 

@@ -32,12 +32,32 @@ breaker) triggers drain-and-quarantine — kill the worker (queued futures
 fail with structured ``EngineClosed``), quarantine its warm streams, re-pin
 all its streams cold onto survivors. Degradation is one warm-up per warm
 victim stream; survivors' carries are untouched.
+
+Snapshot-restore (PR 9): when the dead worker's backend shipped warm-carry
+snapshots (``SubprocessWorker`` always; ``LocalWorker(snapshots=True)``),
+:meth:`fail_worker` upgrades the cold re-pin — each victim's most recent
+snapshot is **collected before the quarantine step**, validated (same
+``plan_hash``; age within ``restore_max_age_s``), and installed onto the
+rendezvous survivor *under the router lock, immediately after
+``open_stream`` and before any frame can route there* — all-or-nothing per
+stream via ``MultiStreamPacker.restore_carry``. A stale, foreign-hash,
+missing, or failed-to-install snapshot falls back to the PR-6 cold
+quarantine path unchanged. Restores count in ``restores`` (with an
+at-restore staleness sample), cold losses in ``quarantined_streams`` —
+the two are disjoint.
+
+Rolling restarts: :meth:`replace_worker` swaps a *dead* slot for a fresh
+worker (rebuilt from the construction-time factory when the router was
+built from a controller), re-arming its health breaker — the lever the
+``bench_bg_fleet`` rolling-restart soak exercises with
+:meth:`crash_worker` (truly unannounced SIGKILL for subprocess backends).
 """
 from __future__ import annotations
 
 import hashlib
 import queue
 import threading
+import time
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 from repro.reliability import EngineClosed, validate_frame
@@ -72,14 +92,29 @@ class FleetRouter:
         breaker_threshold: int = 3,
         breaker_cooldown_s: float = 30.0,
         worker_kwargs: Optional[dict] = None,
+        worker_backend: str = "local",
+        restore_max_age_s: float = 5.0,
     ):
         """Either hand explicit ``workers`` or a ``controller`` +
-        ``n_workers`` and the router builds :class:`LocalWorker`\\ s from the
-        controller's single payload (``worker_kwargs`` passes through).
+        ``n_workers`` and the router builds workers from the controller's
+        single payload (``worker_kwargs`` passes through).
+        ``worker_backend`` picks the controller-built class: ``"local"``
+        (thread-hosted :class:`LocalWorker`) or ``"subprocess"``
+        (process-isolated :class:`~repro.fleet.remote.SubprocessWorker`).
         ``max_worker_queue`` is the router's per-worker backlog bound —
         keep it below the workers' own ``max_queue`` so the router always
         sheds first. ``health_interval_s=None`` disables the watchdog
-        thread (failures are still detected on the submit path)."""
+        thread (failures are still detected on the submit path).
+        ``restore_max_age_s`` bounds snapshot staleness on failover: an
+        older warm-carry snapshot is worse than a cold restart (the EMA
+        would resume from history the live stream has left behind), so it
+        falls back to quarantine."""
+        if restore_max_age_s <= 0:
+            raise ValueError(
+                f"restore_max_age_s must be > 0, got {restore_max_age_s}"
+            )
+        self.restore_max_age_s = restore_max_age_s
+        self._worker_factory = None
         if workers is None:
             if controller is None or n_workers is None:
                 raise TypeError(
@@ -87,11 +122,24 @@ class FleetRouter:
                 )
             if n_workers < 1:
                 raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+            if worker_backend == "local":
+                worker_cls = LocalWorker
+            elif worker_backend == "subprocess":
+                from .remote import SubprocessWorker
+
+                worker_cls = SubprocessWorker
+            else:
+                raise ValueError(
+                    f"worker_backend must be 'local' or 'subprocess', "
+                    f"got {worker_backend!r}"
+                )
             payload = controller.payload()
-            workers = [
-                LocalWorker(i, payload, **(worker_kwargs or {}))
-                for i in range(n_workers)
-            ]
+            # kept for replace_worker: a rolling restart rebuilds a dead
+            # slot from the exact construction-time recipe
+            self._worker_factory = lambda wid: worker_cls(
+                wid, payload, **(worker_kwargs or {})
+            )
+            workers = [self._worker_factory(i) for i in range(n_workers)]
         self.workers: Tuple[Worker, ...] = tuple(workers)
         if not self.workers:
             raise ValueError("FleetRouter needs at least one worker")
@@ -130,6 +178,12 @@ class FleetRouter:
         self._rebalanced = 0
         self._quarantined = 0
         self._workers_lost = 0
+        self._restores = 0
+        self._restore_staleness: List[float] = []  # at-restore ages (s)
+        self._worker_restarts = 0
+        self._reconnects_retired = 0  # banked from replaced workers
+        self._breaker_threshold = breaker_threshold
+        self._breaker_cooldown_s = breaker_cooldown_s
         # every migration ever: (sid, old_wid, new_wid) — all of them pass
         # through fail_worker's quarantine, the affinity invariant's proof
         self.rebalance_log: List[Tuple[Hashable, Hashable, Hashable]] = []
@@ -318,16 +372,24 @@ class FleetRouter:
 
     # -------------------------------------------------------------- health
     def fail_worker(self, wid: Hashable) -> List[Tuple[Hashable, Hashable]]:
-        """Drain-and-quarantine one worker (idempotent). Returns the
-        ``[(sid, new_wid), ...]`` re-pins.
+        """Drain-and-restore-or-quarantine one worker (idempotent). Returns
+        the ``[(sid, new_wid), ...]`` re-pins.
 
         Order matters: (1) kill the worker first — intake stops and queued
-        futures fail with structured ``EngineClosed``, so no pack can still
-        be advancing carries underneath us; (2) quarantine its warm streams
-        through the packer's cold-restart path (counted in the worker's
-        ``carry_resets`` — a dead worker's carry is never copied off it);
-        (3) re-pin every victim stream cold onto its rendezvous survivor.
-        Survivors' streams never move (rendezvous property).
+        futures fail structurally, so no pack can still be advancing
+        carries underneath us; (2) **collect each warm victim's snapshot**
+        (``worker.carry_snapshot`` — the parent-side store for subprocess
+        workers, a live read for ``LocalWorker(snapshots=True)``, ``None``
+        for the default backend) *before* the quarantine step destroys the
+        state a live read would serve; (3) quarantine the warm streams on
+        the dead worker (their carries there are unusable either way);
+        (4) under the lock, re-pin every victim onto its rendezvous
+        survivor and — when a valid snapshot exists (same plan hash, age
+        within ``restore_max_age_s``) — restore it all-or-nothing right
+        after ``open_stream``, before any frame can route to the survivor.
+        Failed/stale/missing snapshots fall back to the cold re-pin
+        (counted in ``quarantined_streams``); successes count in
+        ``restores``. Survivors' streams never move (rendezvous property).
         """
         with self._lock:
             if wid not in self._by_wid:
@@ -349,6 +411,25 @@ class FleetRouter:
             warm = set(worker.warm_streams())
         except Exception:
             warm = set(victims)  # state unreadable: assume every carry lost
+        # (2) snapshot collection MUST precede quarantine: for snapshot
+        # backends that read live state, quarantine would destroy exactly
+        # what we are about to restore
+        now = time.monotonic()
+        snaps = {}
+        for sid in victims:
+            if sid not in warm:
+                continue
+            try:
+                snap = worker.carry_snapshot(sid)
+            except Exception:
+                snap = None
+            if snap is None:
+                continue
+            if snap.plan_hash != self.plan_hash:
+                continue  # foreign dispatch geometry: never restorable
+            if snap.age_s(now) > self.restore_max_age_s:
+                continue  # staler than a cold restart is worth
+            snaps[sid] = snap
         for sid in victims:
             if sid in warm:
                 try:
@@ -360,9 +441,21 @@ class FleetRouter:
             for sid in victims:
                 new_worker = self._place_locked(sid)
                 new_worker.open_stream(sid, self._alphas.get(sid, 0.0))
+                restored = False
+                snap = snaps.get(sid)
+                if snap is not None:
+                    try:
+                        # all-or-nothing: a False/raise leaves the survivor
+                        # stream exactly as open_stream made it (cold)
+                        restored = bool(new_worker.restore_carry(sid, snap))
+                    except Exception:
+                        restored = False
                 self._affinity[sid] = new_worker.wid
                 self._rebalanced += 1
-                if sid in warm:
+                if restored:
+                    self._restores += 1
+                    self._restore_staleness.append(snap.age_s())
+                elif sid in warm:
                     self._quarantined += 1
                 self.rebalance_log.append((sid, wid, new_worker.wid))
                 moved.append((sid, new_worker.wid))
@@ -372,6 +465,73 @@ class FleetRouter:
         """Chaos hook: crash one worker *without* telling the router — the
         watchdog (or the submit path) must notice on its own."""
         self._by_wid[wid].kill()
+
+    def crash_worker(self, wid: Hashable) -> None:
+        """Harder chaos hook: for process-isolated workers, SIGKILL the
+        worker *process* with zero parent-side bookkeeping (the backend's
+        liveness machinery must detect it cold) — the rolling-restart
+        soak's hammer. Thread-hosted backends have no harder crash than
+        ``kill()``, so it falls back to :meth:`kill_worker` semantics."""
+        worker = self._by_wid[wid]
+        crash = getattr(worker, "crash", None)
+        if crash is not None:
+            crash()
+        else:
+            worker.kill()
+
+    def replace_worker(self, wid: Hashable, worker: Optional[Worker] = None):
+        """Swap a **dead** slot for a fresh worker (the rolling-restart
+        lever). With ``worker=None`` the router rebuilds from its
+        construction-time factory (requires controller-built construction);
+        an explicit ``worker`` must carry the same ``wid`` and plan hash.
+        The slot returns to rotation with a re-armed health breaker; the
+        restart is counted in ``worker_restarts``. Streams do *not* move
+        back — rendezvous placement will route *new* streams to the slot,
+        and existing pins stay where failover put them (sticky affinity is
+        never recomputed for live streams)."""
+        with self._lock:
+            if wid not in self._by_wid:
+                raise KeyError(f"unknown worker {wid!r}")
+            if wid not in self._dead:
+                raise ValueError(
+                    f"worker {wid!r} is not dead — fail_worker first "
+                    f"(replacing a live worker would strand its streams)"
+                )
+        if worker is None:
+            if self._worker_factory is None:
+                raise ValueError(
+                    "no worker factory: this router was built from explicit "
+                    "workers= — pass a replacement worker"
+                )
+            worker = self._worker_factory(wid)
+        if worker.wid != wid:
+            raise ValueError(
+                f"replacement wid {worker.wid!r} does not match slot {wid!r}"
+            )
+        if worker.plan_hash != self.plan_hash:
+            raise PlanMismatch(
+                f"replacement worker {wid!r} serves plan "
+                f"{worker.plan_hash!r}, fleet runs {self.plan_hash!r}"
+            )
+        with self._lock:
+            # retired workers leave the tuple; bank their transport counters
+            # so fleet-lifetime telemetry survives the swap
+            old = self._by_wid[wid]
+            self._reconnects_retired += getattr(old, "reconnects", 0)
+            self.workers = tuple(
+                worker if w.wid == wid else w for w in self.workers
+            )
+            self._by_wid[wid] = worker
+            self._dead.discard(wid)
+            self._health[wid] = WorkerHealth(
+                self._breaker_threshold, self._breaker_cooldown_s
+            )
+            self._worker_restarts += 1
+        try:
+            old.close(timeout=0.0)  # release sockets/tmpdirs/threads now
+        except Exception:
+            pass
+        return worker
 
     # ----------------------------------------------------------- telemetry
     @property
@@ -389,6 +549,31 @@ class FleetRouter:
     @property
     def workers_lost(self) -> int:
         return self._workers_lost
+
+    @property
+    def restores(self) -> int:
+        """Warm carries restored from snapshots on failover (the streams
+        that did *not* pay a cold warm-up for their worker's death)."""
+        return self._restores
+
+    @property
+    def worker_restarts(self) -> int:
+        return self._worker_restarts
+
+    @property
+    def restore_staleness_samples(self) -> Tuple[float, ...]:
+        """At-restore snapshot ages (seconds), one per restore."""
+        with self._lock:
+            return tuple(self._restore_staleness)
+
+    @property
+    def reconnects(self) -> int:
+        """Transport reconnects across the fleet's lifetime (subprocess
+        backends; includes workers since retired by replace_worker)."""
+        with self._lock:
+            return self._reconnects_retired + sum(
+                getattr(w, "reconnects", 0) for w in self.workers
+            )
 
     def stats(self):
         """Fleet-wide :class:`~repro.fleet.stats.FleetStats` snapshot."""
@@ -414,6 +599,13 @@ class FleetRouter:
         for w in self.workers:
             if not self.is_dead(w.wid):
                 w.close(timeout=timeout)
+            else:
+                try:
+                    # dead workers still own transport resources (sockets,
+                    # tmpdirs, sweep threads for subprocess backends)
+                    w.close(timeout=0.0)
+                except Exception:
+                    pass
 
     def __enter__(self):
         return self

@@ -34,6 +34,12 @@ class FleetStats:
     queue_depths: Tuple[int, ...]
     per_worker: Tuple[EngineStats, ...]
     merged: EngineStats
+    # PR 9 (process-isolated workers): failover warm restores vs cold
+    # quarantines, snapshot staleness at restore time, transport churn
+    restores: int = 0
+    restore_staleness_p99: float = 0.0
+    reconnects: int = 0
+    worker_restarts: int = 0
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -56,6 +62,10 @@ class FleetStats:
             "workers_lost": self.workers_lost,
             "deadline_miss_rate": self.deadline_miss_rate,
             "max_queue_depth": max(self.queue_depths) if self.queue_depths else 0,
+            "restores": self.restores,
+            "restore_staleness_p99": self.restore_staleness_p99,
+            "reconnects": self.reconnects,
+            "worker_restarts": self.worker_restarts,
         }
         for k, v in self.merged.as_dict().items():
             d[f"merged_{k}"] = v
@@ -63,10 +73,24 @@ class FleetStats:
 
     @classmethod
     def collect(cls, router) -> "FleetStats":
-        """Snapshot ``router``'s fleet. Dead workers' stats still count —
-        their lifetime counters (frames they served before dying, their
-        carry resets) are part of the fleet's history."""
-        per = tuple(w.stats() for w in router.workers)
+        """Snapshot ``router``'s fleet. Dead workers' stats still count
+        when readable — thread-hosted backends keep answering after
+        ``kill()`` (the state shares the router's process), so their
+        lifetime counters stay in the fleet's history; a dead *process*
+        takes its counters with it and is skipped rather than failing the
+        whole snapshot."""
+        def _stats(w):
+            try:
+                return w.stats()
+            except Exception:
+                # a worker that died between the liveness check and the RPC
+                # (subprocess backends): its transport counters are gone,
+                # but the snapshot must still collect
+                return None
+
+        per = tuple(s for s in (_stats(w) for w in router.workers)
+                    if s is not None)
+        stale = getattr(router, "restore_staleness_samples", ())
         return cls(
             workers=len(router.workers),
             workers_alive=router.workers_alive,
@@ -79,4 +103,11 @@ class FleetStats:
             queue_depths=tuple(w.queue_depth() for w in router.workers),
             per_worker=per,
             merged=EngineStats.merge(per),
+            restores=getattr(router, "restores", 0),
+            restore_staleness_p99=(
+                sorted(stale)[min(int(0.99 * len(stale)), len(stale) - 1)]
+                if stale else 0.0
+            ),
+            reconnects=getattr(router, "reconnects", 0),
+            worker_restarts=getattr(router, "worker_restarts", 0),
         )

@@ -26,8 +26,12 @@ trusted internal network behind a validating front door.
 from __future__ import annotations
 
 import abc
+import dataclasses
 import threading
+import time
 from typing import Dict, Hashable, List, Optional
+
+import numpy as np
 
 from repro.plan import BGPlan
 from repro.serving import AsyncFrameEngine, EngineStats
@@ -35,7 +39,33 @@ from repro.video import MultiStreamPacker
 
 from .errors import PlanMismatch, WorkerDown
 
-__all__ = ["Worker", "LocalWorker"]
+__all__ = ["Worker", "LocalWorker", "CarrySnapshot"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CarrySnapshot:
+    """One warm stream's temporal state, frozen as host data.
+
+    This is what travels from a worker to the router (periodically, over
+    the snapshot channel) and from the router to a rendezvous survivor on
+    failover. ``plan_hash`` stamps the dispatch geometry the carry was
+    produced under — the router refuses to restore a snapshot onto a worker
+    with a different hash (a foreign-geometry carry would silently corrupt
+    the stream's EMA). ``taken_at`` (``time.monotonic()`` in the *router's*
+    clock — snapshots are stamped on receipt, so child/parent clock skew
+    cannot fake freshness) bounds staleness: restoring an ancient carry is
+    worse than a cold restart, so `FleetRouter.restore_max_age_s` gates it.
+    """
+
+    sid: Hashable
+    carry: np.ndarray
+    alpha: float
+    frames_seen: int
+    plan_hash: str
+    taken_at: float
+
+    def age_s(self, now: Optional[float] = None) -> float:
+        return (time.monotonic() if now is None else now) - self.taken_at
 
 
 class Worker(abc.ABC):
@@ -101,6 +131,22 @@ class Worker(abc.ABC):
     def close(self, timeout: float = 30.0) -> None:
         """Graceful shutdown: drain, then stop."""
 
+    # Snapshot/restore is optional: the base protocol answers "no snapshot"
+    # so PR-8 backends (and tests built on cold-quarantine semantics) keep
+    # their behavior unchanged unless a backend opts in.
+    def carry_snapshot(self, sid: Hashable) -> Optional[CarrySnapshot]:
+        """Most recent warm-carry snapshot for ``sid``, or ``None``. Must
+        stay answerable *after* the worker dies — the router calls it from
+        ``fail_worker`` — so subprocess backends serve it from the
+        router-side snapshot store, not an RPC."""
+        return None
+
+    def restore_carry(self, sid: Hashable, snap: CarrySnapshot) -> bool:
+        """Install a snapshot onto an open stream; True on success. The
+        default backend cannot restore, so failover falls through to the
+        PR-6 cold-quarantine path."""
+        return False
+
 
 class LocalWorker(Worker):
     """Thread-hosted worker: one ``AsyncFrameEngine`` (plus, for temporal
@@ -123,8 +169,13 @@ class LocalWorker(Worker):
         watchdog_ms: Optional[float] = None,
         fault_injector=None,
         engine_kwargs: Optional[dict] = None,
+        snapshots: bool = False,
     ):
         self.wid = wid
+        # snapshots=False keeps the PR-8 contract (a dead worker's carries
+        # are gone -> cold quarantine); True enables live-read snapshots so
+        # the router's restore path is testable without a subprocess.
+        self.snapshots = bool(snapshots)
         plan = BGPlan.from_json(payload["plan"], mesh=mesh)
         want = payload.get("plan_hash")
         if want is not None and plan.plan_hash() != want:
@@ -198,6 +249,43 @@ class LocalWorker(Worker):
             sid for sid, sess in list(self.packer.sessions.items())
             if sess.carry is not None
         ]
+
+    # ----------------------------------------------------------- snapshots
+    def carry_snapshot(self, sid: Hashable) -> Optional[CarrySnapshot]:
+        """Live read of ``sid``'s current carry (thread backend: the state
+        survives ``kill()`` because the process does). ``snapshots=False``
+        (the default) answers ``None`` — the PR-8 cold-quarantine fleet."""
+        if not self.snapshots or self.packer is None:
+            return None
+        sess = self.packer.sessions.get(sid)
+        if sess is None or sess.carry is None:
+            return None
+        return CarrySnapshot(
+            sid=sid,
+            carry=np.asarray(sess.carry, np.float32),
+            alpha=sess.alpha,
+            frames_seen=sess.frames_seen,
+            plan_hash=self._hash,
+            taken_at=time.monotonic(),
+        )
+
+    def restore_carry(self, sid: Hashable, snap: CarrySnapshot) -> bool:
+        """All-or-nothing install via ``MultiStreamPacker.restore_carry``
+        (which validates geometry/finiteness before assigning anything).
+        A failed restore leaves the stream cold and returns False."""
+        if self.packer is None:
+            return False
+        if snap.plan_hash != self._hash:
+            return False
+        try:
+            with self.engine._packer_lock:
+                self.packer.restore_carry(
+                    sid, snap.carry, alpha=snap.alpha,
+                    frames_seen=snap.frames_seen,
+                )
+        except (KeyError, ValueError):
+            return False
+        return True
 
     # ------------------------------------------------------------- serving
     def submit(self, frame, stream_id=None, deadline_ms=None, block=True,

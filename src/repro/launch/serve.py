@@ -71,10 +71,13 @@ def serve_frames(args) -> None:
 def serve_fleet(args) -> None:
     """Multi-worker video service smoke: the same N-stream synthetic traffic
     as ``serve_video``, fronted by a ``repro.fleet.FleetRouter`` over
-    ``--workers`` thread-hosted engines — one controller-resolved plan for
-    the whole fleet, sticky stream affinity, fleet-level admission and
-    backpressure. Prints fleet throughput + the exactly-merged latency tail
-    (``FleetStats``)."""
+    ``--workers`` engines — thread-hosted by default,
+    ``--worker-backend subprocess`` for process-isolated workers (one
+    engine process each behind the socket codec, with heartbeats and
+    warm-carry snapshot failover). One controller-resolved plan for the
+    whole fleet, sticky stream affinity, fleet-level admission and
+    backpressure. Prints fleet throughput + the exactly-merged latency
+    tail (``FleetStats``)."""
     import jax
     import numpy as np
 
@@ -92,8 +95,10 @@ def serve_fleet(args) -> None:
         streams_per_worker=max(1, -(-n_streams // args.workers)),
         temporal=True,
     )
+    backend = getattr(args, "worker_backend", "local")
     print(
-        f"[serve] fleet: {args.workers} worker(s) x {jax.device_count()} "
+        f"[serve] fleet: {args.workers} {backend} worker(s) x "
+        f"{jax.device_count()} "
         f"device(s), {n_streams} stream(s) x {n_frames} frames {h}x{w}, "
         f"alpha={args.alpha:g}, plan[{controller.plan.describe()}] "
         f"hash={controller.plan_hash}"
@@ -108,6 +113,7 @@ def serve_fleet(args) -> None:
     router = FleetRouter(
         controller=controller,
         n_workers=args.workers,
+        worker_backend=backend,
         worker_kwargs=dict(
             max_batch=max(1, -(-n_streams // args.workers)),
             batch_window_ms=args.batch_window_ms,
@@ -287,8 +293,17 @@ def main():
         type=int,
         default=0,
         help="with --video: front the streams with a fleet router over N "
-        "thread-hosted workers (one controller-distributed plan, sticky "
-        "stream affinity) instead of a single engine",
+        "workers (one controller-distributed plan, sticky stream affinity) "
+        "instead of a single engine",
+    )
+    ap.add_argument(
+        "--worker-backend",
+        choices=("local", "subprocess"),
+        default="local",
+        help="with --workers: host each worker's engine in the router's "
+        "process (local, thread-hosted) or in its own process behind the "
+        "socket codec (subprocess: crash isolation, heartbeat liveness, "
+        "warm-carry snapshot failover)",
     )
     ap.add_argument(
         "--fps",

@@ -30,6 +30,16 @@ Hook points (all host-side; no device work):
       carry with NaN/Inf) and ``drop_carry`` (silently lose it) against the
       packer's live sessions — the poison the carry-quarantine guard must
       catch on the *next* pack.
+  ``on_transport(msg_type, data, direction)``  called by the
+      ``SubprocessWorker`` transport (PR 9) with each encoded wire message.
+      Fires ``drop_message`` (returns ``None`` — the bytes vanish),
+      ``truncate_message`` (returns a prefix — the peer sees a torn frame
+      and must produce a structured ``CodecError``, never a hang), and
+      ``delay_heartbeat`` (opens a ``delay_s`` suppression window during
+      which heartbeat messages are swallowed — the liveness monitor's
+      staleness path). Counters are the same seeded/deterministic scheme
+      as the engine hooks; the ``dispatch`` selector indexes transport
+      messages seen by this injector.
 
 Fault matching: a fault fires when every non-``None`` selector matches
 (``stream_id``, ``frame_index``, ``dispatch``, ``backend``) and it has fired
@@ -61,6 +71,11 @@ FAULT_KINDS = (
     "drop_carry",
     "raise_dispatch",
     "hang_completion",
+    # transport-layer kinds (PR 9): fired by the SubprocessWorker's
+    # on_transport hook against encoded wire messages
+    "drop_message",
+    "truncate_message",
+    "delay_heartbeat",
 )
 _MODES = ("nan", "inf")
 
@@ -79,9 +94,16 @@ class Fault:
       backend:     restrict ``raise_dispatch`` to one ``BGPlan.backend`` —
                    the lever for failing a single fallback-ladder rung.
       mode:        corruption value: ``"nan"`` or ``"inf"``.
-      fraction:    fraction of pixels corrupted by ``corrupt_frame``.
-      delay_s:     sleep injected by ``hang_completion``.
+      fraction:    fraction of pixels corrupted by ``corrupt_frame``; for
+                   ``truncate_message``, the fraction of the encoded message
+                   *kept* (the tail is cut).
+      delay_s:     sleep injected by ``hang_completion``; for
+                   ``delay_heartbeat``, the length of the heartbeat
+                   suppression window.
       times:       max fire count (``None`` = every match fires).
+      message:     restrict transport faults to one wire message type
+                   (a :data:`repro.fleet.codec.MSG_TYPES` name, e.g.
+                   ``"submit"`` or ``"heartbeat"``); ``None`` matches any.
     """
 
     kind: str
@@ -93,6 +115,7 @@ class Fault:
     fraction: float = 0.05
     delay_s: float = 0.0
     times: Optional[int] = 1
+    message: Optional[str] = None
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -143,6 +166,8 @@ class FaultInjector:
         self.log: List[Tuple[str, object]] = []
         self._frame_counts: Dict[Hashable, int] = {}
         self._dispatches = 0
+        self._messages = 0      # transport messages seen by on_transport
+        self._hb_resume = 0.0   # heartbeat suppression window end (monotonic)
 
     # ------------------------------------------------------------ matching
     def _armed(self, i: int) -> bool:
@@ -252,6 +277,55 @@ class FaultInjector:
                     hit.append(sid)
                     self.log.append((f.kind, (sid, dispatch)))
         return hit
+
+    def on_transport(
+        self,
+        msg_type: str,
+        data: bytes,
+        direction: str = "send",
+    ) -> Optional[bytes]:
+        """Transport hook: maybe-mutated wire bytes for one encoded message.
+
+        Returns the bytes to actually put on (or accept from) the wire —
+        possibly truncated — or ``None`` when the message should vanish
+        (``drop_message`` fired, or a ``delay_heartbeat`` suppression window
+        is open and ``msg_type == "heartbeat"``). Faults match on the
+        ``message`` selector (wire message-type name) and the ``dispatch``
+        selector (n-th transport message seen by this injector, 0-based,
+        counted across both directions)."""
+        with self._lock:
+            m = self._messages
+            self._messages += 1
+            now = time.monotonic()
+            if msg_type == "heartbeat" and now < self._hb_resume:
+                self.log.append(("delay_heartbeat", (m, "suppressed")))
+                return None
+            for i, f in enumerate(self.plan.faults):
+                if f.kind not in (
+                    "drop_message", "truncate_message", "delay_heartbeat"
+                ) or not self._armed(i):
+                    continue
+                if f.message is not None and f.message != msg_type:
+                    continue
+                if f.dispatch is not None and f.dispatch != m:
+                    continue
+                self.fired[i] += 1
+                self.log.append((f.kind, (m, msg_type, direction)))
+                if f.kind == "drop_message":
+                    return None
+                if f.kind == "truncate_message":
+                    # keep a strict prefix: at least 1 byte, never the whole
+                    # message (a no-op truncation would test nothing)
+                    keep = max(1, min(len(data) - 1,
+                                      int(round(f.fraction * len(data)))))
+                    return data[:keep]
+                # delay_heartbeat: open the suppression window; the
+                # triggering message itself is swallowed when it is a
+                # heartbeat, passed through otherwise
+                self._hb_resume = max(self._hb_resume, now + f.delay_s)
+                if msg_type == "heartbeat":
+                    return None
+            return data
 
     # ----------------------------------------------------- plan integration
     @contextlib.contextmanager

@@ -130,6 +130,11 @@ class EngineStats:
     passed; ``watchdog_trips`` — in-flight batches that exceeded the
     completion watchdog.
 
+    Fleet counters (PR 9): ``restores`` — temporal carries re-installed from
+    a warm snapshot after failover (the opposite of ``carry_resets``);
+    ``reconnects`` — transport connections re-established to a
+    process-spanning worker. Both are zero for in-process engines.
+
     ``stats["key"]`` indexing is kept as a legacy shim for the former dict
     form; prefer attribute access. ``as_dict()`` feeds exporters (the
     ``BENCH_<ts>.json`` snapshot rows in benchmarks/bench_video_stream.py).
@@ -158,6 +163,8 @@ class EngineStats:
     carry_resets: int = 0
     shed: int = 0
     watchdog_trips: int = 0
+    restores: int = 0
+    reconnects: int = 0
     latency_samples: Tuple[float, ...] = ()
 
     def __getitem__(self, key: str):
@@ -219,6 +226,8 @@ class EngineStats:
             carry_resets=sum(p.carry_resets for p in parts),
             shed=sum(p.shed for p in parts),
             watchdog_trips=sum(p.watchdog_trips for p in parts),
+            restores=sum(p.restores for p in parts),
+            reconnects=sum(p.reconnects for p in parts),
             latency_samples=tuple(samples),
         )
 
@@ -477,6 +486,7 @@ class AsyncFrameEngine:
                 carry_resets=self._carry_resets,
                 shed=self._shed,
                 watchdog_trips=self._watchdog_trips,
+                restores=getattr(self.packer, "carry_restores", 0) or 0,
                 latency_samples=tuple(x * 1e3 for x in lat),
             )
 

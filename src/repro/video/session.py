@@ -113,7 +113,8 @@ class MultiStreamPacker:
             )
         self.plan = plan
         self.sessions: Dict[Hashable, StreamSession] = {}
-        self.carry_resets = 0  # lifetime count of quarantined carries
+        self.carry_resets = 0    # lifetime count of quarantined carries
+        self.carry_restores = 0  # lifetime count of snapshot-restored carries
 
     @property
     def cfg(self) -> BGConfig:
@@ -147,6 +148,65 @@ class MultiStreamPacker:
         sess.carry = None
         self.carry_resets += 1
         return True
+
+    # ------------------------------------------------------------ snapshots
+    def export_carries(self) -> Dict[Hashable, tuple]:
+        """Snapshot every warm stream's temporal state as host data:
+        ``{sid: (carry ndarray, alpha, frames_seen)}``. The returned carries
+        are materialized numpy copies — safe to ship across a process
+        boundary and immune to later in-place session mutation. Cold
+        streams are omitted (there is nothing to restore; re-opening cold
+        is already lossless)."""
+        out: Dict[Hashable, tuple] = {}
+        for sid, sess in list(self.sessions.items()):
+            if sess.carry is None:
+                continue
+            out[sid] = (
+                np.asarray(sess.carry, np.float32),
+                sess.alpha,
+                sess.frames_seen,
+            )
+        return out
+
+    def restore_carry(
+        self,
+        sid: Hashable,
+        carry,
+        *,
+        alpha: Optional[float] = None,
+        frames_seen: Optional[int] = None,
+    ) -> None:
+        """Install a snapshotted carry onto an open (cold) stream —
+        **all-or-nothing**: every validation runs before any session field
+        is assigned, so a bad snapshot (wrong geometry, non-finite values,
+        unknown stream) leaves the session exactly as it was (cold), never
+        half-restored. The carry must match this packer's grid geometry
+        ``(gx, gy, gz, 2)``; a carry produced under a different plan
+        geometry is a caller bug (the router checks plan hashes first)."""
+        sess = self.sessions.get(sid)
+        if sess is None:
+            raise KeyError(f"stream {sid!r} not open")
+        arr = np.asarray(carry, np.float32)
+        if arr.ndim != 4 or arr.shape[-1] != 2:
+            raise ValueError(
+                f"stream {sid!r}: carry must be (gx, gy, gz, 2), "
+                f"got shape {arr.shape}"
+            )
+        if not np.isfinite(arr).all():
+            raise ValueError(
+                f"stream {sid!r}: refusing to restore a non-finite carry"
+            )
+        if alpha is not None and not 0.0 <= float(alpha) < 1.0:
+            raise ValueError(
+                f"stream {sid!r}: restored alpha must be in [0, 1)"
+            )
+        # validation complete — commit atomically from here down
+        sess.carry = jnp.asarray(arr)
+        if alpha is not None:
+            sess.alpha = float(alpha)
+        if frames_seen is not None:
+            sess.frames_seen = int(frames_seen)
+        self.carry_restores += 1
 
     # ---------------------------------------------------------------- pack
     def pack(self, frames: Dict[Hashable, jnp.ndarray], *, plan=None) -> Dict[Hashable, jnp.ndarray]:

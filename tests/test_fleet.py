@@ -242,6 +242,236 @@ def test_workers_share_one_compiled_executable():
         assert w1.plan.executable() is w2.plan.executable()
 
 
+# ----------------------------------------- snapshot-restore failover (PR 9)
+class _SnapshotTamperer(LocalWorker):
+    """A snapshot-enabled LocalWorker whose snapshots can be doctored —
+    the deterministic lever for the router's reject paths (staleness,
+    foreign hash, poisoned carry) without a subprocess or a clock."""
+
+    def __init__(self, *args, age_offset=0.0, hash_override=None,
+                 poison=False, **kw):
+        kw.setdefault("snapshots", True)
+        super().__init__(*args, **kw)
+        self.age_offset = age_offset
+        self.hash_override = hash_override
+        self.poison = poison
+
+    def carry_snapshot(self, sid):
+        import dataclasses
+
+        snap = super().carry_snapshot(sid)
+        if snap is None:
+            return None
+        if self.hash_override is not None:
+            snap = dataclasses.replace(snap, plan_hash=self.hash_override)
+        if self.poison:
+            snap = dataclasses.replace(
+                snap, carry=np.full_like(snap.carry, np.nan)
+            )
+        return dataclasses.replace(
+            snap, taken_at=snap.taken_at - self.age_offset
+        )
+
+
+def _warmed_snapshot_fleet(worker_cls=None, n_streams=6, router_kw=None,
+                           **worker_extra):
+    """Two snapshot-enabled workers (worker 0 optionally a tamperer), all
+    streams warmed twice. Returns (router, pins)."""
+    payload = _controller().payload()
+    kw = dict(max_batch=8, batch_window_ms=1.0, snapshots=True)
+    w0 = (worker_cls or LocalWorker)(0, payload, **kw, **worker_extra)
+    w1 = LocalWorker(1, payload, **kw)
+    router = FleetRouter(workers=[w0, w1], health_interval_s=None,
+                         **(router_kw or {}))
+    pins = {s: router.open_stream(s, alpha=ALPHA) for s in range(n_streams)}
+    for _ in range(2):
+        for f in [router.submit(_frame(200 + s), stream_id=s)
+                  for s in range(n_streams)]:
+            f.result()
+    return router, pins
+
+
+def test_fail_worker_restores_warm_carries_bit_exact():
+    """With snapshots enabled, a worker death restores its warm streams'
+    carries bit-for-bit onto the survivor — zero cold quarantines — and
+    stays idempotent across the snapshot path."""
+    router, pins = _warmed_snapshot_fleet()
+    with router:
+        victim_wid = pins[0]
+        victim = router.workers[victim_wid]
+        survivor = next(w for w in router.workers if w.wid != victim_wid)
+        victims = sorted(s for s, w in pins.items() if w == victim_wid)
+        assert victims, "rendezvous gave worker 0 no streams"
+        want = {
+            s: np.asarray(victim.packer.sessions[s].carry, np.float32)
+            for s in victims
+        }
+        seen = {s: victim.packer.sessions[s].frames_seen for s in victims}
+
+        moved = router.fail_worker(victim_wid)
+
+        assert sorted(s for s, _ in moved) == victims
+        assert router.restores == len(victims)
+        assert router.quarantined_streams == 0  # warm restore, not cold
+        assert router.rebalanced_streams == len(victims)
+        assert len(router.restore_staleness_samples) == len(victims)
+        assert all(a < 5.0 for a in router.restore_staleness_samples)
+        for s in victims:
+            sess = survivor.packer.sessions[s]
+            np.testing.assert_array_equal(
+                np.asarray(sess.carry, np.float32), want[s]
+            )
+            assert sess.frames_seen == seen[s]
+        # restored streams keep serving — and the EMA continues, so the
+        # next frame leaves the carry different from the restored state
+        for s in victims:
+            assert np.isfinite(np.asarray(
+                router.submit(_frame(300 + s), stream_id=s).result()
+            )).all()
+        st = router.stats()
+        assert st.restores == len(victims)
+        assert st.quarantined_streams == 0
+        assert st.restore_staleness_p99 >= 0.0
+        # idempotent: the second report neither re-restores nor re-counts
+        assert router.fail_worker(victim_wid) == []
+        assert router.restores == len(victims)
+        assert router.workers_lost == 1
+
+
+def test_stale_snapshot_falls_back_to_cold_quarantine():
+    """A snapshot older than restore_max_age_s is worse than a cold
+    restart: the router must quarantine, not resurrect ancient state."""
+    router, pins = _warmed_snapshot_fleet(
+        worker_cls=_SnapshotTamperer, age_offset=60.0,
+        router_kw=dict(restore_max_age_s=5.0),
+    )
+    with router:
+        victims = sorted(s for s, w in pins.items() if w == 0)
+        survivor = router.workers[1]
+        router.fail_worker(0)
+        assert router.restores == 0
+        assert router.quarantined_streams == len(victims)
+        for s in victims:
+            assert survivor.packer.sessions[s].carry is None  # cold
+
+
+def test_foreign_hash_snapshot_never_restored():
+    """A snapshot stamped with a different plan hash is a carry from a
+    different dispatch geometry — restoring it would silently corrupt the
+    stream's EMA, so it must fall back to quarantine."""
+    router, pins = _warmed_snapshot_fleet(
+        worker_cls=_SnapshotTamperer, hash_override="f" * 16,
+    )
+    with router:
+        victims = sorted(s for s, w in pins.items() if w == 0)
+        router.fail_worker(0)
+        assert router.restores == 0
+        assert router.quarantined_streams == len(victims)
+
+
+def test_failed_restore_is_all_or_nothing():
+    """A snapshot that fails validation mid-restore (poisoned NaN carry)
+    must leave the survivor's stream exactly as open_stream made it —
+    cold, zero frames_seen — never half-restored."""
+    router, pins = _warmed_snapshot_fleet(
+        worker_cls=_SnapshotTamperer, poison=True,
+    )
+    with router:
+        victims = sorted(s for s, w in pins.items() if w == 0)
+        survivor = router.workers[1]
+        router.fail_worker(0)
+        assert router.restores == 0
+        assert router.quarantined_streams == len(victims)
+        for s in victims:
+            sess = survivor.packer.sessions[s]
+            assert sess.carry is None
+            assert sess.frames_seen == 0
+            assert sess.alpha == ALPHA
+        # and the stream still serves (cold restart, finite output)
+        for s in victims:
+            assert np.isfinite(np.asarray(
+                router.submit(_frame(400 + s), stream_id=s).result()
+            )).all()
+
+
+# ---------------------------------------------------------- rolling restart
+def test_replace_worker_requires_death_and_matching_identity():
+    with _fleet(n_workers=2) as router:
+        with pytest.raises(ValueError, match="not dead"):
+            router.replace_worker(0)
+        with pytest.raises(KeyError):
+            router.replace_worker("no-such-worker")
+        router.fail_worker(0)
+        fresh = router.replace_worker(0)
+        assert fresh.wid == 0 and fresh.plan_hash == router.plan_hash
+        assert router.worker_restarts == 1
+        assert router.workers_alive == 2
+        assert not router.is_dead(0)
+        assert router.workers[0] is fresh
+
+
+def test_replace_worker_returns_slot_to_rotation():
+    """After replacement, new streams place onto the fresh slot by
+    rendezvous; existing pins stay where failover put them."""
+    with _fleet(n_workers=2) as router:
+        pins = {s: router.open_stream(s, alpha=ALPHA) for s in range(6)}
+        for f in [router.submit(_frame(s), stream_id=s) for s in range(6)]:
+            f.result()
+        router.fail_worker(0)
+        router.replace_worker(0)
+        # failover pins are sticky: nothing moved back
+        for s in range(6):
+            assert router.stream_worker(s) == 1
+        # but new streams rendezvous over BOTH workers again
+        new_pins = {
+            s: router.open_stream(s, alpha=ALPHA) for s in range(6, 30)
+        }
+        assert set(new_pins.values()) == {0, 1}
+        for s in list(new_pins) + list(pins):
+            assert np.isfinite(np.asarray(
+                router.submit(_frame(s), stream_id=s).result()
+            )).all()
+
+
+def test_replace_worker_rejects_wrong_wid_and_foreign_plan():
+    payload = _controller().payload()
+    with _fleet(n_workers=2) as router:
+        router.fail_worker(1)
+        wrong_wid = LocalWorker(99, payload)
+        try:
+            with pytest.raises(ValueError, match="does not match slot"):
+                router.replace_worker(1, worker=wrong_wid)
+        finally:
+            wrong_wid.close(timeout=5.0)
+        foreign = LocalWorker(1, PlanController(
+            cfg=BGConfig(r=8, sigma_s=4.0, sigma_r=60.0), height=H, width=W,
+            streams_per_worker=4, temporal=True, sharded=False,
+        ).payload())
+        try:
+            with pytest.raises(PlanMismatch):
+                router.replace_worker(1, worker=foreign)
+        finally:
+            foreign.close(timeout=5.0)
+        assert router.worker_restarts == 0
+        assert router.is_dead(1)  # the slot is still replaceable
+        router.replace_worker(1)
+        assert router.worker_restarts == 1
+
+
+def test_explicit_workers_router_has_no_factory():
+    payload = _controller().payload()
+    w0 = LocalWorker(0, payload)
+    w1 = LocalWorker(1, payload)
+    router = FleetRouter(workers=[w0, w1], health_interval_s=None)
+    with router:
+        router.fail_worker(0)
+        with pytest.raises(ValueError, match="factory"):
+            router.replace_worker(0)
+        # an explicit same-recipe replacement still works
+        w0b = LocalWorker(0, payload)
+        assert router.replace_worker(0, worker=w0b) is w0b
+
+
 def test_controller_bless_roundtrip(tmp_path):
     """bless() writes the fleet's plan into a cache file that a later
     plan_for resolves from (provenance flips to the cache)."""

@@ -1,0 +1,244 @@
+"""Wire codec: seeded fuzz of the framing/validation contract.
+
+The codec's docstring promises "a corrupt or adversarial peer can at worst
+produce a CodecError, never code execution or an unbounded allocation".
+These tests drive that promise with deterministic numpy-seeded fuzz (no
+hypothesis dependency): random geometries and dtypes round-trip bit-exact;
+truncation at EVERY byte boundary of a real message and random bit flips
+anywhere in it decode to a structured ``CodecError`` (never a hang, never
+a partial object); the length caps fire before allocation; and the array
+re-validation in ``decode_array`` refuses geometry/dtype/byte-count
+mismatches.
+"""
+import io
+import json
+import os
+import struct
+import sys
+import zlib
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.fleet import CodecError, ConnectionClosed
+from repro.fleet.codec import (
+    MAX_HEADER_BYTES,
+    MAX_PAYLOAD_BYTES,
+    MSG_TYPES,
+    PREAMBLE_BYTES,
+    array_header,
+    decode,
+    decode_array,
+    encode,
+    read_message,
+)
+
+RNG = np.random.default_rng(0xB65)
+
+WIRE_DTYPES = [
+    np.float32, np.float64, np.float16,
+    np.int8, np.int16, np.int32, np.int64,
+    np.uint8, np.uint16, np.uint32, np.uint64,
+    np.bool_,
+]
+
+
+def _random_array(rng):
+    ndim = int(rng.integers(0, 5))
+    shape = tuple(int(rng.integers(0, 6)) for _ in range(ndim))
+    dtype = WIRE_DTYPES[int(rng.integers(0, len(WIRE_DTYPES)))]
+    raw = rng.integers(0, 256, size=shape, dtype=np.uint8, endpoint=False)
+    return raw.astype(dtype)
+
+
+def _chunked_reader(data, chunk=7):
+    """A recv(n) over a byte string that returns ragged chunks, then ''."""
+    buf = io.BytesIO(data)
+    return lambda n: buf.read(min(n, chunk))
+
+
+# ------------------------------------------------------------- round trips
+def test_roundtrip_fuzz_geometries_and_dtypes():
+    """200 random (msg_type, header, array) messages survive encode ->
+    decode and encode -> ragged-chunk read_message bit-exactly."""
+    names = sorted(MSG_TYPES)
+    for trial in range(200):
+        rng = np.random.default_rng(1000 + trial)
+        arr = _random_array(rng)
+        name = names[int(rng.integers(0, len(names)))]
+        header = dict(array_header(arr), rid=trial, sid=f"s{trial}")
+        wire = encode(name, header, arr.tobytes())
+
+        got_name, got_header, payload = decode(wire)
+        assert got_name == name
+        assert got_header == json.loads(json.dumps(header))
+        out = decode_array(got_header, payload)
+        assert out.dtype == arr.dtype and out.shape == arr.shape
+        assert np.array_equal(out, arr)
+
+        chunk = int(rng.integers(1, 11))
+        got_name2, got_header2, payload2 = read_message(
+            _chunked_reader(wire, chunk=chunk)
+        )
+        assert (got_name2, got_header2, payload2) == (
+            got_name, got_header, payload
+        )
+
+
+def test_empty_payload_and_empty_header_roundtrip():
+    name, header, payload = decode(encode("heartbeat", {}))
+    assert name == "heartbeat" and header == {} and payload == b""
+
+
+def test_unknown_message_type_refused_at_encode():
+    with pytest.raises(CodecError, match="unknown message type"):
+        encode("gossip", {})
+
+
+# ------------------------------------------------- truncation: every cut
+def test_truncation_at_every_byte_boundary_is_structured():
+    """Cutting a real message at EVERY byte offset yields CodecError from
+    decode() — except length 0, which read_message treats as a clean close
+    (decode still refuses: its caller framed a partial buffer)."""
+    arr = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    wire = encode("result", dict(array_header(arr), rid=1), arr.tobytes())
+    for cut in range(len(wire)):
+        with pytest.raises(CodecError):
+            decode(wire[:cut])
+
+
+def test_streamed_truncation_mid_message_vs_boundary():
+    """read_message: EOF at a message boundary is ConnectionClosed (clean
+    peer shutdown); EOF anywhere mid-message is CodecError (torn frame)."""
+    arr = np.ones((3, 5), np.float32)
+    wire = encode("submit", dict(array_header(arr), rid=7), arr.tobytes())
+    with pytest.raises(ConnectionClosed):
+        read_message(_chunked_reader(b""))
+    rng = np.random.default_rng(2)
+    cuts = {1, PREAMBLE_BYTES - 1, PREAMBLE_BYTES, len(wire) - 1} | {
+        int(c) for c in rng.integers(1, len(wire), size=32)
+    }
+    for cut in cuts:
+        with pytest.raises(CodecError, match="EOF|stalled"):
+            read_message(_chunked_reader(wire[:cut]))
+
+
+def test_idle_timeout_at_boundary_propagates_mid_message_does_not():
+    """A TimeoutError before any byte is the caller's idle policy and
+    propagates; a timeout after partial bytes is a torn frame."""
+    def idle(n):
+        raise TimeoutError("idle")
+
+    with pytest.raises(TimeoutError):
+        read_message(idle)
+
+    wire = encode("ack", {"rid": 1})
+    buf = io.BytesIO(wire[:4])
+
+    def stall(n):
+        chunk = buf.read(n)
+        if not chunk:
+            raise TimeoutError("stalled")
+        return chunk
+
+    with pytest.raises(CodecError, match="stalled mid-message"):
+        read_message(stall)
+
+
+# ----------------------------------------------------------- bit-flip fuzz
+def test_bitflip_fuzz_never_yields_wrong_payload():
+    """400 single-bit flips at random offsets anywhere in the wire bytes —
+    preamble fields included — decode to CodecError, never to a wrong
+    message (the CRC covers preamble[0:20]+header+payload, so even a flip
+    that lands the type byte on another *valid* type cannot decode)."""
+    arr = np.arange(60, dtype=np.int16).reshape(5, 12)
+    wire = bytearray(
+        encode("snapshot", dict(array_header(arr), sid=3), arr.tobytes())
+    )
+    rng = np.random.default_rng(3)
+    for _ in range(400):
+        i = int(rng.integers(0, len(wire)))
+        bit = 1 << int(rng.integers(0, 8))
+        flipped = bytes(wire[:i] + bytes([wire[i] ^ bit]) + wire[i + 1:])
+        with pytest.raises(CodecError):
+            decode(flipped)
+
+
+def test_bad_magic_version_and_type_bytes():
+    good = encode("hello", {"wid": 0})
+    for i in (0, 4, 5):  # magic, version, message-type bytes
+        bad = bytearray(good)
+        bad[i] ^= 0xFF
+        with pytest.raises(CodecError):
+            decode(bytes(bad))
+
+
+# ------------------------------------------------------------- length caps
+def test_length_caps_fire_before_allocation():
+    """A forged preamble claiming a 2**60-byte payload must be refused
+    from the 24 preamble bytes alone — no read, no allocation."""
+    pre = struct.Struct(">4sBBHIQI")
+    forged = pre.pack(b"BGF1", 1, MSG_TYPES["submit"], 0, 10, 1 << 60, 0)
+    with pytest.raises(CodecError, match="exceeds cap"):
+        decode(forged)
+    forged = pre.pack(
+        b"BGF1", 1, MSG_TYPES["submit"], 0, MAX_HEADER_BYTES + 1, 0, 0
+    )
+    with pytest.raises(CodecError, match="exceeds cap"):
+        decode(forged)
+
+    calls = {"n": 0}
+
+    def recv(n):
+        calls["n"] += 1
+        assert calls["n"] <= 1, "codec kept reading past a capped preamble"
+        return pre.pack(b"BGF1", 1, 4, 0, 0, MAX_PAYLOAD_BYTES + 1, 0)
+
+    with pytest.raises(CodecError, match="exceeds cap"):
+        read_message(recv)
+
+
+def test_oversize_refused_at_encode_too():
+    with pytest.raises(CodecError, match="payload too large"):
+        encode("submit", {}, b"\0" * (MAX_PAYLOAD_BYTES + 1))
+
+
+# ------------------------------------------------------------- array layer
+def test_array_header_refuses_object_dtype():
+    with pytest.raises(CodecError, match="not allowed on the wire"):
+        array_header(np.array([{"a": 1}], dtype=object))
+
+
+def test_decode_array_revalidates_everything():
+    arr = np.zeros((4, 6), np.float32)
+    hdr, payload = array_header(arr), arr.tobytes()
+    # geometry lies about the byte count
+    with pytest.raises(CodecError, match="needs"):
+        decode_array({"shape": [4, 7], "dtype": "<f4"}, payload)
+    # dtype lies about the byte count
+    with pytest.raises(CodecError, match="needs"):
+        decode_array({"shape": [4, 6], "dtype": "<f8"}, payload)
+    # smuggled object dtype in an otherwise-valid header
+    with pytest.raises(CodecError, match="not allowed"):
+        decode_array({"shape": [1], "dtype": "|O"}, payload)
+    # negative dimension
+    with pytest.raises(CodecError, match="negative"):
+        decode_array({"shape": [-4, 6], "dtype": "<f4"}, payload)
+    # missing fields / junk
+    with pytest.raises(CodecError, match="bad array header"):
+        decode_array({"dtype": "<f4"}, payload)
+    with pytest.raises(CodecError, match="bad array header"):
+        decode_array({"shape": [4, 6], "dtype": "not-a-dtype"}, payload)
+    # the straight path still works and owns its memory (no frombuffer view
+    # of a network buffer escapes)
+    out = decode_array(hdr, payload)
+    assert out.flags.owndata or out.base is None
+    assert np.array_equal(out, arr)
+
+
+def test_decode_array_scalar_shape():
+    arr = np.float64(3.25)
+    out = decode_array(array_header(np.asarray(arr)), np.asarray(arr).tobytes())
+    assert out.shape == () and float(out) == 3.25
