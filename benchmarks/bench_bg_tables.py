@@ -7,7 +7,8 @@ roofline-ranked pick — the repo's real hot path) rather than the jnp
 reference: the r-independence claim is about the pipelined datapath, and the
 pipelined datapath here is the fused Pallas kernel under its auto-tuned
 dispatch geometry. Each row records the plan that produced it (backend /
-batch_tile / provenance), so the perf trajectory stays attributable.
+batch_tile / storage precision / provenance, via ``BGPlan.describe``), so
+the perf trajectory stays attributable.
 
 The gated ``ratio/bg_plan_tuned_vs_default`` row is the floor on the whole
 tuning story: the plan `plan_for` picks for a workload must never be slower

@@ -17,6 +17,14 @@ The largest batch additionally emits a ``ratio/bg_batched_vs_looped`` row:
 the batched-vs-looped speedup is a property of the code, not the host, so
 run.py's quick-mode gate checks it against a floor on any machine with no
 committed snapshot needed.
+
+The mixed-precision dispatch gate (``ratio/bg_bf16_vs_fp32_dispatch``)
+measures the tentpole claim of the bf16 storage datapath: halving the
+per-frame step bytes roughly doubles the VMEM-feasible ``batch_tile``, so
+on a streamed workload whose fp32 working set needs two budget passes the
+bf16 plan sweeps the whole pack in one. Each precision dispatches exactly
+the plan its own ``auto_batch_tile`` would pick — the ratio is the
+auto-tuner's real win, not a hand-picked tile pairing.
 """
 import time
 
@@ -31,6 +39,17 @@ REPS = 9
 # a drop below the floor means per-frame dispatch amortization broke (e.g.
 # the batch falls out of the single (batch, stripe) grid into a retrace).
 BATCHED_RATIO_FLOOR = 1.2
+# bf16-vs-fp32 streamed dispatch on the geometry below: fp32's per-frame
+# step bytes land in the (256 KiB, 512 KiB] band, so its auto tile is
+# VMEM-capped below the pack and the dispatch pays two padded budget
+# passes where bf16 pays one. Observed ~1.5x on CPU interpret mode; below
+# the floor the bf16 tile-doubling mechanism broke (step-bytes model or
+# kernel storage dtype regressed to fp32 footprints).
+BF16_DISPATCH_RATIO_FLOOR = 1.15
+# (h, w, r, sigma_r, pack) for the precision gate — chosen so the whole
+# fp32 band (256, 512] KiB maps to tile in [16, 31] (always 2 passes at
+# pack 32) while bf16's halved footprint fits the pack in one pass.
+BF16_GATE_GEOMETRY = (32, 96, 4, 8.0, 32)
 
 
 def _paired_min_times(fn_a, fn_b, reps=REPS):
@@ -96,4 +115,51 @@ def run(quick: bool = False):
                     f"b={b} {h}x{w}",
                 )
             )
+
+    # mixed-precision dispatch: auto-tuned bf16 vs auto-tuned fp32 on the
+    # streamed workload where fp32 is VMEM-capped below the pack
+    from repro.plan import BGPlan, auto_batch_tile
+
+    gh, gw, gr, gsr, gb = BF16_GATE_GEOMETRY
+    gcfg = BGConfig(r=gr, sigma_s=4.0, sigma_r=gsr)
+    tile32 = auto_batch_tile(gcfg, gh, gw, gb, stream_input=True,
+                             precision="fp32")
+    tile16 = auto_batch_tile(gcfg, gh, gw, gb, stream_input=True,
+                             precision="bf16")
+    plan32 = BGPlan(cfg=gcfg, backend="fused_streamed", batch_tile=tile32)
+    plan16 = BGPlan(cfg=gcfg, backend="fused_streamed", batch_tile=tile16,
+                    precision="bf16")
+    noisy = add_gaussian_noise(synthetic_batch(gb, gh, gw, seed=0), 30.0,
+                               seed=1)
+
+    def fp32_dispatch():
+        jax.block_until_ready(plan32(noisy))
+
+    def bf16_dispatch():
+        jax.block_until_ready(plan16(noisy))
+
+    t16, t32 = _paired_min_times(bf16_dispatch, fp32_dispatch)
+    rows.append(
+        (
+            f"bg_throughput/fp32_streamed_b{gb}_{gh}x{gw}",
+            t32 / gb * 1e6,
+            f"fps={gb / t32:.0f} batch_tile={tile32}",
+        )
+    )
+    rows.append(
+        (
+            f"bg_throughput/bf16_streamed_b{gb}_{gh}x{gw}",
+            t16 / gb * 1e6,
+            f"fps={gb / t16:.0f} batch_tile={tile16}",
+        )
+    )
+    rows.append(
+        (
+            "ratio/bg_bf16_vs_fp32_dispatch",
+            t32 / t16,
+            f"floor={BF16_DISPATCH_RATIO_FLOOR} fp32/bf16 streamed dispatch "
+            f"time at b={gb} {gh}x{gw} r={gr} (auto tiles {tile32} vs "
+            f"{tile16}; bf16 halves step bytes -> one VMEM pass vs two)",
+        )
+    )
     return rows

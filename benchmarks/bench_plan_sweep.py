@@ -4,12 +4,24 @@ persistent plan cache.
 
 The sweep-then-generate-tables harness for the plan layer (ROADMAP item 2):
 for each ``(h, w, r, b, temporal)`` workload it times every legal
-``backend x batch_tile`` candidate that :func:`repro.plan.plan_for` would
-rank, compares the roofline model's pick (``plan_cost``) against the
-measured best, and records the measured winner into
-:mod:`repro.plan_cache` — after which ``plan_for`` resolves that workload
-from the cache (verified here: the read-back row fails the run if the
-cache path is dead). Artifacts:
+``backend x batch_tile x precision`` candidate that
+:func:`repro.plan.plan_for` would rank under ``precision="auto"``, compares
+the roofline model's pick (``plan_cost``) against the measured best, and
+records the measured winner into :mod:`repro.plan_cache` — after which
+``plan_for`` resolves that workload from the cache (verified here: the
+read-back row fails the run if the cache path is dead; the read-back
+passes ``precision="auto"`` since a measured winner may legally be bf16).
+
+Per-backend calibration (ROADMAP item 2's second half): after the sweep,
+the measured-vs-roofline residuals are least-squares fit to the model's
+overhead structure — ``measured - (compute + memory) ~= A + B*steps +
+C*streamed_frame_steps`` (A ~ DISPATCH_OVERHEAD_S, B ~ STEP_OVERHEAD_S,
+C ~ STREAM_DMA_OVERHEAD_S) — and the fitted constants are stored in the
+plan cache under this host's fingerprint
+(:meth:`repro.plan_cache.PlanCache.record_calibration`). The fit is
+provenance, not policy: ``plan_cost`` keeps its structural constants, so
+recording a calibration never perturbs what ``tests/test_plan.py`` asserts
+``plan_for`` ranks. Artifacts:
 
   * ``results/plan_sweep/sweep_<ts>.json`` — the raw per-candidate records,
   * ``results/plan_sweep/sweep_<ts>.md`` — the markdown table
@@ -54,23 +66,27 @@ def _workloads(quick: bool):
 
 
 def _candidates(cfg, h, w, b, temporal):
-    """The same legal candidate grid plan_for's model ranks (single-device)."""
-    from repro.plan import BGPlan, auto_batch_tile
+    """The same legal candidate grid plan_for's model ranks under
+    ``precision="auto"`` (single-device)."""
+    from repro.plan import PRECISIONS, BGPlan, auto_batch_tile
 
     backends = ("fused",) if temporal else ("fused", "fused_streamed")
     plans = []
-    for be in backends:
-        cap = auto_batch_tile(
-            cfg, h, w, b,
-            stream_input=be == "fused_streamed",
-            temporal=temporal,
-        )
-        tiles = sorted({t for t in (1, 2, 4, 8, 16, 32, 64) if t < cap}
-                       | {cap})
-        plans.extend(
-            BGPlan(cfg=cfg, backend=be, temporal=temporal, batch_tile=t)
-            for t in tiles
-        )
+    for prec in PRECISIONS:
+        for be in backends:
+            cap = auto_batch_tile(
+                cfg, h, w, b,
+                stream_input=be == "fused_streamed",
+                temporal=temporal,
+                precision=prec,
+            )
+            tiles = sorted({t for t in (1, 2, 4, 8, 16, 32, 64) if t < cap}
+                           | {cap})
+            plans.extend(
+                BGPlan(cfg=cfg, backend=be, temporal=temporal, batch_tile=t,
+                       precision=prec)
+                for t in tiles
+            )
     return plans
 
 
@@ -92,12 +108,13 @@ def _time_plan(plan, frames, carry, alpha, reps):
 
 def run(quick: bool = False):
     from repro.launch.roofline import render_plan_sweep_table
-    from repro.plan import plan_cost, plan_for
-    from repro.plan_cache import get_default_cache, workload_key
+    from repro.plan import plan_cost_breakdown, plan_for
+    from repro.plan_cache import get_default_cache, host_fingerprint, workload_key
 
     reps = 3 if quick else 5
     cache = get_default_cache()
     rows, records = [], []
+    fit_design, fit_target = [], []  # overhead-calibration rows (see docstring)
     worst_regret = 1.0
     for h, w, cfg, b, temporal in _workloads(quick):
         frames = add_gaussian_noise(synthetic_batch(b, h, w, seed=0), 30.0,
@@ -119,15 +136,26 @@ def run(quick: bool = False):
             )
         cands = []
         for p in plans:
+            bd = plan_cost_breakdown(p, h, w, b)
+            measured_s = _time_plan(p, frames, carry, alpha, reps)
             cands.append(
                 {
                     "plan": p.to_json(),
                     "plan_hash": p.plan_hash(),
-                    "model_us": plan_cost(p, h, w, b) * 1e6,
-                    "measured_us": _time_plan(p, frames, carry, alpha, reps)
-                    * 1e6,
+                    "model_us": bd["total_s"] * 1e6,
+                    "measured_us": measured_s * 1e6,
                 }
             )
+            # one calibration row per candidate: the measured overhead
+            # (measured minus the roofline compute+memory terms) against
+            # the model's overhead structure [1, steps, streamed frame-steps]
+            frame_steps = bd["steps"] * p.tile_for(b)
+            fit_design.append([
+                1.0,
+                float(bd["steps"]),
+                float(frame_steps) if p.backend == "fused_streamed" else 0.0,
+            ])
+            fit_target.append(measured_s - (bd["compute_s"] + bd["memory_s"]))
         best_i = min(range(len(cands)),
                      key=lambda i: cands[i]["measured_us"])
         model_i = min(range(len(cands)), key=lambda i: cands[i]["model_us"])
@@ -143,9 +171,11 @@ def run(quick: bool = False):
             model_us=cands[best_i]["model_us"],
         )
         # read-back through the real resolution path: plan_for must now
-        # resolve this workload from the cache (provenance == "cache")
+        # resolve this workload from the cache (provenance == "cache").
+        # precision="auto" because the measured winner may legally be bf16
+        # — the default precision=None pins fp32 and would refuse it.
         resolved = plan_for(cfg, h, w, n_frames=b, temporal=temporal,
-                            sharded=False, cache=cache)
+                            sharded=False, cache=cache, precision="auto")
         if resolved.provenance != "cache" or (
             resolved.plan_hash() != winner.plan_hash()
         ):
@@ -212,6 +242,38 @@ def run(quick: bool = False):
             f"{len(records)} workloads; 1.00 = model found every true "
             f"winner (informational) — table: "
             f"{os.path.relpath(md_path, REPO_ROOT)} cache: {cache.path}",
+        )
+    )
+
+    # least-squares overhead calibration over every measured candidate row
+    # (ROADMAP item 2): fitted constants are stored per host fingerprint as
+    # cache provenance — plan_cost keeps its structural constants.
+    import numpy as np
+
+    design = np.asarray(fit_design, np.float64)
+    target = np.asarray(fit_target, np.float64)
+    coef, _, _, _ = np.linalg.lstsq(design, target, rcond=None)
+    coef = np.maximum(coef, 0.0)  # overheads are nonnegative by construction
+    rms = float(np.sqrt(np.mean((target - design @ coef) ** 2)))
+    fp = host_fingerprint()
+    cache.record_calibration(
+        fp,
+        {
+            "dispatch_overhead_s": float(coef[0]),
+            "step_overhead_s": float(coef[1]),
+            "stream_dma_overhead_s": float(coef[2]),
+            "rms_residual_s": rms,
+            "n_rows": len(fit_target),
+        },
+    )
+    rows.append(
+        (
+            "plan_sweep/calibration_fit",
+            rms * 1e6,
+            f"dispatch={coef[0] * 1e6:.1f}us step={coef[1] * 1e6:.2f}us "
+            f"stream_dma={coef[2] * 1e9:.2f}ns rms_residual over "
+            f"{len(fit_target)} candidate rows -> calibration[{fp}] in "
+            f"{cache.path} (informational)",
         )
     )
     return rows

@@ -83,6 +83,16 @@ def _load_baseline(quick: bool):
 
 
 def _write_snapshot(rows, args):
+    """Write this run's rows as a new BENCH_<ts>.json at the repo root.
+
+    Retention policy: keep the latest ~2-3 committed snapshots per machine
+    fingerprint and delete older ones when committing a new one. The gate
+    only ever reads the NEWEST comparable committed snapshot
+    (see ``_load_baseline``), so older files are dead weight that bloats
+    the repo and invites confusion about which baseline is live. Snapshots
+    older than the current schema (e.g. rows missing precision provenance)
+    should be the first to go.
+    """
     ts = time.strftime("%Y%m%d_%H%M%S")
     path = os.path.join(REPO_ROOT, f"BENCH_{ts}.json")
     snap = {

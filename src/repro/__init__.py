@@ -29,11 +29,23 @@ equivalent plan, bit-identically. Which backend fires for which geometry:
                                         streaming + mesh (1-D batch-axis
                                         shard_map, zero collectives)
 
+  precision / intent                    storage dtype (BGPlan.precision)
+  -----------------------------------   ---------------------------------
+  default (precision=None/"fp32")       fp32 end to end — numerics are
+                                        never reduced silently
+  precision="bf16" (pinned) or          bf16 *storage* (stripes, line
+  precision="auto" (model-ranked on     buffers, grid planes, carries, DMA
+  the fused/reference family)           blocks, snapshot wire) with fp32
+                                        accumulation in every GC/GF/TI
+                                        contraction — halves step bytes,
+                                        ~doubles the VMEM-feasible tile
+
 Auto-tuning kicks in inside :func:`repro.plan.plan_for`: ``batch_tile`` is
 the largest tile whose per-step working set fits the documented VMEM-budget
 model (capped at ``ceil(n_frames / mesh_size)``), ``stream_input`` flips on
-per the byte threshold above. See the ``repro.plan`` module docstring for
-the model's term-by-term derivation.
+per the byte threshold above, and ``precision="auto"`` lets the roofline
+rank bf16 candidates against fp32. See the ``repro.plan`` module docstring
+for the model's term-by-term derivation.
 """
 
 __version__ = "1.1.0"

@@ -93,10 +93,20 @@ MSG_TYPES: Dict[str, int] = {
 _TYPE_NAMES = {v: k for k, v in MSG_TYPES.items()}
 
 # dtypes allowed on the wire: everything the serving stack actually ships
-# (float frames, quantized uint8 outputs, float32 carries) plus the common
-# numeric types so the codec is reusable. Object/void dtypes are refused —
-# they would deserialize through pickle, which this codec exists to avoid.
+# (float frames, quantized uint8 outputs, float32/bfloat16 carries) plus the
+# common numeric types so the codec is reusable. Object/void dtypes are
+# refused — they would deserialize through pickle, which this codec exists
+# to avoid. bfloat16 is the one non-"biuf" exception: numpy registers it
+# (via jax's ml_dtypes) with kind 'V' and a ``.str`` of ``'<V2'`` that does
+# NOT round-trip through ``np.dtype`` (it would decode as raw void), so it
+# travels under its *name* and is matched by identity below.
 _WIRE_KINDS = frozenset("biuf")
+try:  # ml_dtypes ships with jax; guarded so the codec imports without it
+    import ml_dtypes as _ml_dtypes
+
+    _BFLOAT16 = np.dtype(_ml_dtypes.bfloat16)
+except Exception:  # pragma: no cover - ml_dtypes is a jax hard dep here
+    _BFLOAT16 = None
 
 
 def encode(msg_type: str, header: dict, payload: bytes = b"") -> bytes:
@@ -209,6 +219,8 @@ def array_header(arr: np.ndarray) -> dict:
     whatever ``tobytes()`` emits — C order — regardless of the array's
     in-memory layout."""
     arr = np.asarray(arr)
+    if _BFLOAT16 is not None and arr.dtype == _BFLOAT16:
+        return {"shape": list(arr.shape), "dtype": "bfloat16"}
     if arr.dtype.kind not in _WIRE_KINDS:
         raise CodecError(f"dtype {arr.dtype} not allowed on the wire")
     return {"shape": list(arr.shape), "dtype": arr.dtype.str}
@@ -219,10 +231,20 @@ def decode_array(header: dict, payload: bytes) -> np.ndarray:
     shipped, re-validating geometry, dtype, and byte count."""
     try:
         shape = tuple(int(s) for s in header["shape"])
-        dtype = np.dtype(header["dtype"])
+        name = header["dtype"]
+        if name == "bfloat16":
+            if _BFLOAT16 is None:
+                raise CodecError(
+                    "bfloat16 payload but ml_dtypes is unavailable"
+                )
+            dtype = _BFLOAT16
+        else:
+            dtype = np.dtype(name)
     except (KeyError, TypeError, ValueError) as exc:
         raise CodecError(f"bad array header: {exc}") from None
-    if dtype.kind not in _WIRE_KINDS:
+    if dtype.kind not in _WIRE_KINDS and not (
+        _BFLOAT16 is not None and dtype == _BFLOAT16
+    ):
         raise CodecError(f"dtype {dtype} not allowed on the wire")
     if any(s < 0 for s in shape):
         raise CodecError(f"negative dimension in shape {shape}")

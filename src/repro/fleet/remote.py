@@ -539,7 +539,9 @@ class SubprocessWorker(Worker):
     def restore_carry(self, sid: Hashable, snap: CarrySnapshot) -> bool:
         if snap.plan_hash != self._hash:
             return False
-        arr = np.ascontiguousarray(np.asarray(snap.carry, np.float32))
+        # dtype-preserving: a bf16 carry travels as bf16 bytes (the
+        # codec names it; the child-side packer re-validates geometry)
+        arr = np.ascontiguousarray(np.asarray(snap.carry))
         try:
             ok = self._rpc(
                 "restore",

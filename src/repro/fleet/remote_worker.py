@@ -128,7 +128,7 @@ def _push_snapshots(conn: _Conn, worker) -> list:
         snap = worker.carry_snapshot(sid)
         if snap is None:
             continue
-        arr = np.ascontiguousarray(np.asarray(snap.carry, np.float32))
+        arr = np.ascontiguousarray(np.asarray(snap.carry))  # keep dtype
         conn.send(
             "snapshot",
             {

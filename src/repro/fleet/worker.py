@@ -262,7 +262,9 @@ class LocalWorker(Worker):
             return None
         return CarrySnapshot(
             sid=sid,
-            carry=np.asarray(sess.carry, np.float32),
+            # the packer plan's storage dtype (fp32 or bf16) — a bf16 fleet
+            # snapshots/ships half the carry bytes, bit-exact in its mode
+            carry=np.asarray(sess.carry, self.packer.plan.np_storage_dtype),
             alpha=sess.alpha,
             frames_seen=sess.frames_seen,
             plan_hash=self._hash,

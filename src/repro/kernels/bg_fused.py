@@ -160,7 +160,17 @@ def _pipeline_step(
     carry plane after TI is done. ``ti_valid`` masks the TI output write on
     that drain step (``None`` = always write, keeping the non-temporal
     jaxpr unchanged).
+
+    Storage precision: the scratch refs' dtype is the plan's *storage*
+    dtype (fp32 or bf16 — ``bg_fused_impl`` allocates them). Every scratch
+    read upcasts to fp32, every write downcasts to the ref dtype, the big
+    per-step stacks (GC one-hot z-stack, TI z-weights, the stacked blurred
+    planes) are materialized in the storage dtype, and both contractions
+    pin ``preferred_element_type=float32`` — bf16 operands, fp32
+    accumulation. On fp32 scratch every one of these casts is a same-dtype
+    no-op, so the fp32 jaxpr is byte-for-byte the pre-precision one.
     """
+    sdt = r2_s.dtype  # the storage dtype (scratch allocation decides)
     # ---- GC: one dense one-hot z-reduction for all frames, rows and both
     # homogeneous channels at once, then a static row split onto planes
     # s / s+1 (rows [0, split) land on plane s, the rest on s+1). The one-hot
@@ -174,14 +184,17 @@ def _pipeline_step(
     ohz = jnp.where(eq, msk[:, :, None, :], 0.0)
     both = jnp.stack(
         [ohz, jnp.where(eq, (px * msk)[:, :, None, :], 0.0)], axis=1
-    )  # (bt, 2, r, gz, w)
-    zgi = jnp.einsum("bcizw,wg->bcizg", both, col_oh)  # one matmul, not four
+    ).astype(sdt)  # (bt, 2, r, gz, w) — storage dtype (the dominant stack)
+    zgi = jnp.einsum(
+        "bcizw,wg->bcizg", both, col_oh,
+        preferred_element_type=jnp.float32,
+    )  # one matmul, not four; fp32 accumulation
     contrib_cur = zgi[:, :, :split].sum(axis=2)  # (bt, 2, gz, gy) -> plane s
     contrib_next = zgi[:, :, split:].sum(axis=2)  # -> plane s+1
 
-    r2 = r2_s[...]
-    r1 = r1_s[...]
-    r0 = apart_s[...] + contrib_cur  # raw plane s complete
+    r2 = r2_s[...].astype(jnp.float32)
+    r1 = r1_s[...].astype(jnp.float32)
+    r0 = apart_s[...].astype(jnp.float32) + contrib_cur  # raw plane s complete
 
     # ---- GF of plane s-1 (both homogeneous channels, one pass)
     mix = taps[0] * r2 + taps[1] * r1 + taps[2] * r0  # x axis (stripe index)
@@ -208,13 +221,13 @@ def _pipeline_step(
         mix = jax.lax.optimization_barrier(
             one_minus_a * mix
         ) + jax.lax.optimization_barrier(a * carry_plane)
-        carry_out_ref[0, 0] = mix
+        carry_out_ref[0, 0] = mix.astype(carry_out_ref.dtype)
     b_new = jnp.where(
         mix[:, 0] > 1e-12, mix[:, 1] / jnp.maximum(mix[:, 0], 1e-12), 0.0
     )  # (bt, gz, gy)
 
     # ---- TI of stripe s-2 against blurred planes s-2 (b1) and s-1 (b_new)
-    spx = s2_s[...]  # (bt, r, w)
+    spx = s2_s[...].astype(jnp.float32)  # (bt, r, w)
     fz = spx * inv_rs
     z0 = jnp.floor(fz).astype(jnp.int32)
     zfr = fz - z0.astype(jnp.float32)
@@ -222,34 +235,39 @@ def _pipeline_step(
     wz = (
         jnp.where(z0[:, :, None, :] == zi2, 1.0, 0.0) * (1.0 - zfr)[:, :, None, :]
         + jnp.where((z0 + 1)[:, :, None, :] == zi2, 1.0, 0.0) * zfr[:, :, None, :]
-    )  # (bt, r, gz, w)
-    planes = jnp.stack([b1_s[...], b_new], axis=0)  # (2, bt, gz, gy)
+    ).astype(sdt)  # (bt, r, gz, w) — storage dtype (the other big stack)
+    planes = jnp.stack([b1_s[...].astype(jnp.float32), b_new], axis=0).astype(
+        sdt
+    )  # (2, bt, gz, gy)
     # all four y-corner gathers in one contraction over gy (minor on both
-    # operands: no transposition of the planes)
-    gathered = jnp.einsum("pbzg,cwg->pbzcw", planes, y_oh)  # (2, bt, gz, 2, w)
+    # operands: no transposition of the planes); fp32 accumulation
+    gathered = jnp.einsum(
+        "pbzg,cwg->pbzcw", planes, y_oh,
+        preferred_element_type=jnp.float32,
+    )  # (2, bt, gz, 2, w)
     # fold the x/y lerp weights before the z contraction (linearity)
     wy = gathered[:, :, :, 0] * (1.0 - yf) + gathered[:, :, :, 1] * yf
     q = (
         wy[0][:, None] * (1.0 - xf)[None, :, None, None]
         + wy[1][:, None] * xf[None, :, None, None]
     )  # (bt, r, gz, w)
-    sliced = jnp.sum(wz * q, axis=2)
+    sliced = jnp.sum(wz.astype(jnp.float32) * q, axis=2)
     if ti_valid is None:
-        out_ref[...] = sliced
+        out_ref[...] = sliced.astype(out_ref.dtype)
     else:
         # temporal drain step (h % r == 0 only): the revisited out block
         # keeps its previous (correct) content when the write is skipped
         @pl.when(ti_valid)
         def _write():
-            out_ref[...] = sliced
+            out_ref[...] = sliced.astype(out_ref.dtype)
 
     # ---- rotate the working set (the macro-pipeline advance)
-    r2_s[...] = r1
-    r1_s[...] = r0
-    apart_s[...] = contrib_next
-    b1_s[...] = b_new
+    r2_s[...] = r1.astype(sdt)
+    r1_s[...] = r0.astype(sdt)
+    apart_s[...] = contrib_next.astype(sdt)
+    b1_s[...] = b_new.astype(sdt)
     s2_s[...] = s1_s[...]
-    s1_s[...] = px
+    s1_s[...] = px.astype(sdt)
 
 
 def _reset_working_set(r2_s, r1_s, apart_s, b1_s, s2_s, s1_s):
@@ -286,7 +304,7 @@ def _kernel(
         # the blended plane written back as the new carry.
         carry_ref, alpha_ref, out_ref, carry_out_ref, *scratch = rest
         a = alpha_ref[...].reshape(-1, 1, 1, 1)  # (bt, 1, 1, 1)
-        blend = (carry_ref[0, 0], a, carry_out_ref)
+        blend = (carry_ref[0, 0].astype(jnp.float32), a, carry_out_ref)
         ti_valid = s < n_stripes + 2  # mask TI on the extra carry drain step
     else:
         out_ref, *scratch = rest
@@ -380,7 +398,7 @@ def _stream_kernel(
         # overlap: stripe s+1 streams in while stripe s computes below
         stripe_dma(s + 1, jax.lax.rem(s + 1, 2)).start()
 
-    px = px_slots[slot]
+    px = px_slots[slot].astype(jnp.float32)
     # The validity mask is never streamed: synthesize it from the frame/row
     # counters (padding frames of the last tile and padding rows of the last
     # stripe are 0, drain steps are 0 via `live`) — identical values to the
@@ -418,12 +436,20 @@ def bg_fused_impl(
     stream_input: bool = False,
     carry: jnp.ndarray | None = None,
     alpha: jnp.ndarray | None = None,
+    precision: str = "fp32",
 ):
     """Fused BG pipeline, single frame or batch, optionally temporal.
 
-    (h, w) -> float32 (h, w); (b, h, w) -> float32 (b, h, w). A single frame
-    is exactly the b == 1 batch (same kernel, bit-identical output). Matches
-    ref.ref_fused per frame (paper normalization, unquantized).
+    (h, w) -> (h, w); (b, h, w) -> (b, h, w), in the storage dtype (float32
+    for ``precision="fp32"``, bfloat16 for ``"bf16"`` — the plan layer
+    upcasts image output back to float32). A single frame is exactly the
+    b == 1 batch (same kernel, bit-identical output). Matches ref.ref_fused
+    per frame (paper normalization, unquantized).
+
+    ``precision="bf16"`` flips every storage surface — padded input, mask,
+    the six scratch buffers, the DMA stripe slots, the temporal carry blocks
+    and both outputs — to bfloat16 while the compute body accumulates fp32
+    (see ``_pipeline_step``); the fp32 path's jaxpr is unchanged.
 
     ``batch_tile`` caps frames per grid step (clamped to b; default
     ``DEFAULT_BATCH_TILE``). Batches not divisible by the tile are padded
@@ -443,6 +469,11 @@ def bg_fused_impl(
     """
     if interpret is None:
         interpret = default_interpret()
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(
+            f"precision must be 'fp32' or 'bf16', got {precision!r}"
+        )
+    sdt = jnp.bfloat16 if precision == "bf16" else jnp.float32
     if batch_tile is not None and (
         isinstance(batch_tile, bool)
         or not isinstance(batch_tile, int)
@@ -476,26 +507,28 @@ def bg_fused_impl(
     bp = nb * bt
     img_p = jnp.pad(
         image.astype(jnp.float32), ((0, bp - b), (0, hp - h), (0, 0))
-    )
+    ).astype(sdt)
 
     oh0, oh1, yf = ti_col_onehots(w, gy, r)
     taps = tuple(float(t) for t in taps_np(cfg))
     const = lambda shape: pl.BlockSpec(shape, lambda bi, s: tuple(0 for _ in shape))
     frame_spec = lambda imap: pl.BlockSpec((bt, r, w), imap)
+    # the one-hot matmul operands travel in the storage dtype (their 0/1
+    # entries are exact in bf16); the lerp fractions stay fp32
     consts = (
-        jnp.asarray(gc_col_onehot(w, gy, r)),
-        jnp.asarray(np.stack([oh0, oh1])),
+        jnp.asarray(gc_col_onehot(w, gy, r)).astype(sdt),
+        jnp.asarray(np.stack([oh0, oh1])).astype(sdt),
         jnp.asarray(yf)[None],
         jnp.asarray((np.arange(r) / r).astype(np.float32))[None],
     )
     const_specs = [const((w, gy)), const((2, w, gy)), const((1, w)), const((1, r))]
     scratch = [
-        pltpu.VMEM((bt, 2, gz, gy), jnp.float32),  # raw plane s-2
-        pltpu.VMEM((bt, 2, gz, gy), jnp.float32),  # raw plane s-1
-        pltpu.VMEM((bt, 2, gz, gy), jnp.float32),  # partial plane s(+1)
-        pltpu.VMEM((bt, gz, gy), jnp.float32),  # blurred plane s-2
-        pltpu.VMEM((bt, r, w), jnp.float32),  # line buffer stripe s-2
-        pltpu.VMEM((bt, r, w), jnp.float32),  # line buffer stripe s-1
+        pltpu.VMEM((bt, 2, gz, gy), sdt),  # raw plane s-2
+        pltpu.VMEM((bt, 2, gz, gy), sdt),  # raw plane s-1
+        pltpu.VMEM((bt, 2, gz, gy), sdt),  # partial plane s(+1)
+        pltpu.VMEM((bt, gz, gy), sdt),  # blurred plane s-2
+        pltpu.VMEM((bt, r, w), sdt),  # line buffer stripe s-2
+        pltpu.VMEM((bt, r, w), sdt),  # line buffer stripe s-1
     ]
 
     if temporal:
@@ -510,13 +543,13 @@ def bg_fused_impl(
         # kernel's scratch layout minor, so one block index names the whole
         # (bt, 2, gz, gy) plane the EMA touches at step s.
         carry_p = jnp.pad(
-            carry.astype(jnp.float32), ((0, bp - b),) + ((0, 0),) * 4
+            carry.astype(sdt), ((0, bp - b),) + ((0, 0),) * 4
         )
         ck = carry_p.transpose(1, 0, 4, 3, 2)  # (gx, bp, 2, gz, gy)
         ck = ck.reshape(gx, nb, bt, 2, gz, gy).swapaxes(0, 1)
         alpha_p = jnp.pad(alpha.astype(jnp.float32), (0, bp - b)).reshape(nb, bt)
         msk_p = jnp.pad(
-            jnp.ones((b, h, w), jnp.float32), ((0, bp - b), (0, hp - h), (0, 0))
+            jnp.ones((b, h, w), sdt), ((0, bp - b), (0, hp - h), (0, 0))
         )
         # blurred plane p completes (and its carry blend lands) at step
         # s = p + 1, so emitting all gx carry planes takes gx + 1 steps:
@@ -552,8 +585,8 @@ def bg_fused_impl(
                 carry_spec,
             ],
             out_shape=[
-                jax.ShapeDtypeStruct((bp, hp, w), jnp.float32),
-                jax.ShapeDtypeStruct((nb, gx, bt, 2, gz, gy), jnp.float32),
+                jax.ShapeDtypeStruct((bp, hp, w), sdt),
+                jax.ShapeDtypeStruct((nb, gx, bt, 2, gz, gy), sdt),
             ],
             scratch_shapes=scratch,
             interpret=interpret,
@@ -589,17 +622,17 @@ def bg_fused_impl(
             grid=(nb, n + 2),
             in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] + const_specs,
             out_specs=frame_spec(lambda bi, s: (bi, jnp.maximum(s - 2, 0), 0)),
-            out_shape=jax.ShapeDtypeStruct((bp, hp, w), jnp.float32),
+            out_shape=jax.ShapeDtypeStruct((bp, hp, w), sdt),
             scratch_shapes=scratch
             + [
-                pltpu.VMEM((2, bt, r, w), jnp.float32),  # DMA stripe slots
+                pltpu.VMEM((2, bt, r, w), sdt),  # DMA stripe slots
                 pltpu.SemaphoreType.DMA((2,)),  # per-slot completion
             ],
             interpret=interpret,
         )(img_t, *consts)
     else:
         msk_p = jnp.pad(
-            jnp.ones((b, h, w), jnp.float32), ((0, bp - b), (0, hp - h), (0, 0))
+            jnp.ones((b, h, w), sdt), ((0, bp - b), (0, hp - h), (0, 0))
         )
         kern = functools.partial(
             _kernel,
@@ -618,7 +651,7 @@ def bg_fused_impl(
             ]
             + const_specs,
             out_specs=frame_spec(lambda bi, s: (bi, jnp.maximum(s - 2, 0), 0)),
-            out_shape=jax.ShapeDtypeStruct((bp, hp, w), jnp.float32),
+            out_shape=jax.ShapeDtypeStruct((bp, hp, w), sdt),
             scratch_shapes=scratch,
             interpret=interpret,
         )(img_p, msk_p, *consts)
@@ -631,5 +664,8 @@ def bg_fused_impl(
 # compiled executable — a nested pjit call costs ~10% extra dispatch time
 # per micro-batch in interpret mode, measured at the video-gate shape.
 bg_fused_kernel_call = functools.partial(
-    jax.jit, static_argnames=("cfg", "interpret", "batch_tile", "stream_input")
+    jax.jit,
+    static_argnames=(
+        "cfg", "interpret", "batch_tile", "stream_input", "precision"
+    ),
 )(bg_fused_impl)

@@ -46,11 +46,31 @@ with it:
 ``repro.sharding.bg_shard``). ``temporal`` switches the executable to the
 ``(frames, carry, alpha) -> (out, new_carry)`` video form.
 
+Storage precision (``BGPlan.precision``)
+----------------------------------------
+``precision`` names the kernel's *storage* dtype: ``"fp32"`` (default) or
+``"bf16"`` — bf16 storage with fp32 accumulation. Under ``"bf16"`` the
+fused kernel holds its streamed input stripes, VMEM line buffers, raw and
+blurred grid planes, per-step one-hot stacks, and the temporal carry in
+bfloat16 while every GC/GF/TI contraction accumulates in float32
+(``preferred_element_type``) — halving the per-step VMEM working set (so
+``auto_batch_tile`` roughly doubles) and the manual-DMA/HBM bytes the
+roofline model charges. The temporal carry is *stored and shipped* in the
+plan's storage dtype end-to-end (session state, snapshot wire, socket RPC),
+and ``alpha == 0`` bit-identity between the temporal and per-frame paths
+holds within each precision mode. Reduced precision is a quality decision:
+``plan_for`` defaults to fp32 and only ranks bf16 candidates when asked
+(``precision="auto"`` or ``"bf16"``); ``bench_bg_quality`` gates the
+bf16-vs-fp32 MSSIM floor. Only ``reference``/``fused``/``fused_streamed``
+implement the contract; ``precision="bf16"`` on other backends is rejected
+at construction.
+
 The VMEM-budget model (the ``batch_tile`` / ``stream_input`` auto-tuner)
 ------------------------------------------------------------------------
 The fused kernel's per-grid-step working set scales linearly with the batch
-tile ``bt`` (frames advanced per macro-pipeline step). Per frame, in f32
-elements (see the tensors in ``kernels.bg_fused._pipeline_step``):
+tile ``bt`` (frames advanced per macro-pipeline step). Per frame, in
+storage-dtype elements (4 B fp32 / 2 B bf16 — see the tensors in
+``kernels.bg_fused._pipeline_step``):
 
   inputs+outputs   6*r*w   default path (2 img + 2 msk + 2 out auto-pipelined
                            blocks), or 4*r*w streamed (2 DMA slots + 2 out —
@@ -93,7 +113,8 @@ the per-chip peaks in ``repro.launch.hlo_analysis`` (``PEAK_FLOPS``,
   memory_s    HBM bytes moved: input blocks (img+msk on the default path,
               img only when streamed — the mask never leaves the kernel),
               the output write-back, and for temporal plans the carry
-              read+write (``2 * 4 * gx*gy*gz*2`` bytes per frame).
+              read+write (``2 * esz * gx*gy*gz*2`` bytes per frame, where
+              ``esz`` is the plan's storage element size: 4 fp32 / 2 bf16).
   overhead_s  ``DISPATCH_OVERHEAD_S`` per dispatch + ``STEP_OVERHEAD_S``
               per grid step (why bigger tiles win: fewer steps) +
               ``STREAM_DMA_OVERHEAD_S`` per frame-step on the manual-DMA
@@ -154,6 +175,8 @@ __all__ = [
     "auto_batch_tile",
     "auto_stream_input",
     "step_bytes_per_frame",
+    "PRECISIONS",
+    "precision_bytes",
     "set_dispatch_hook",
     "VMEM_STEP_BUDGET_BYTES",
     "STREAM_INPUT_THRESHOLD_BYTES",
@@ -168,6 +191,23 @@ _KERNEL_BACKENDS = ("staged", "fused", "fused_streamed")
 _FUSED_BACKENDS = ("fused", "fused_streamed")
 _MESH_BACKENDS = ("streaming", "fused", "fused_streamed")
 _TEMPORAL_BACKENDS = ("reference", "fused")
+
+# Storage precisions and the backends that implement the bf16-storage /
+# fp32-accumulate contract (module docstring, "Storage precision"). The
+# element sizes feed the VMEM-budget and roofline models.
+PRECISIONS = ("fp32", "bf16")
+_BF16_BACKENDS = ("reference", "fused", "fused_streamed")
+_PRECISION_BYTES = {"fp32": 4, "bf16": 2}
+
+
+def precision_bytes(precision: str) -> int:
+    """Storage element size in bytes for a plan precision name."""
+    try:
+        return _PRECISION_BYTES[precision]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        ) from None
 
 # The auto-tuner's budget model (documented in the module docstring): keep
 # the fused kernel's per-step working set within half a 16 MiB VMEM, switch
@@ -192,15 +232,18 @@ STREAM_DMA_OVERHEAD_S = 8e-8
 # ---------------------------------------------------------------- heuristics
 def step_bytes_per_frame(
     cfg: BGConfig, h: int, w: int, *, stream_input: bool = False,
-    temporal: bool = False,
+    temporal: bool = False, precision: str = "fp32",
 ) -> int:
     """Fused-kernel per-grid-step VMEM bytes for ONE frame of the batch tile.
 
     The linear-in-``bt`` part of the step footprint (io blocks + scratch +
     dominant temporaries); constants (column one-hots, taps) are tile-
     independent and excluded. Temporal plans additionally hold the
-    double-buffered carry in/out blocks (``2 * 2 * (2*gz*gy)`` f32 elements
-    per frame — one ``(gy, gz, 2)`` carry plane each way). See the module
+    double-buffered carry in/out blocks (``2 * 2 * (2*gz*gy)`` elements
+    per frame — one ``(gy, gz, 2)`` carry plane each way). Every term is
+    held in the plan's *storage* dtype (4 B fp32 / 2 B bf16: the one-hot
+    z-stacks and interpolation weights are materialized in bf16 too — the
+    contractions consume bf16 operands and accumulate fp32). See the module
     docstring for the term-by-term derivation.
     """
     r = cfg.r
@@ -209,7 +252,7 @@ def step_bytes_per_frame(
     scratch = 7 * gz * gy + 2 * r * w
     temporaries = 5 * r * gz * w
     carry = 8 * gz * gy if temporal else 0
-    return 4 * (io + scratch + temporaries + carry)
+    return precision_bytes(precision) * (io + scratch + temporaries + carry)
 
 
 def auto_stream_input(cfg: BGConfig, h: int, w: int) -> bool:
@@ -227,15 +270,18 @@ def auto_batch_tile(
     stream_input: bool = False,
     mesh_size: int = 1,
     temporal: bool = False,
+    precision: str = "fp32",
 ) -> int:
     """Largest batch tile whose per-step working set fits the VMEM budget.
 
     Capped at ``MAX_AUTO_TILE`` and, when the pack size is known, at the
     per-device share ``ceil(n_frames / mesh_size)`` (a larger tile would be
-    pure padding on every device).
+    pure padding on every device). bf16 storage halves the per-frame step
+    bytes, so the feasible tile roughly doubles.
     """
     per = step_bytes_per_frame(
-        cfg, h, w, stream_input=stream_input, temporal=temporal
+        cfg, h, w, stream_input=stream_input, temporal=temporal,
+        precision=precision,
     )
     bt = max(1, VMEM_STEP_BUDGET_BYTES // per)
     bt = min(bt, MAX_AUTO_TILE)
@@ -285,11 +331,13 @@ def plan_cost_breakdown(plan: "BGPlan", h: int, w: int,
         )
         flops = b_pad * n_grid * per_frame_step_flops
         # HBM traffic: img (+ msk on the default path) in, out back; the
-        # grid itself never leaves VMEM on the fused path
-        frame_bytes = 4 * r * n_grid * w
+        # grid itself never leaves VMEM on the fused path. Operand blocks
+        # travel in the plan's storage dtype (bf16 halves them).
+        esz = precision_bytes(plan.precision)
+        frame_bytes = esz * r * n_grid * w
         hbm = b_pad * frame_bytes * (2 if streamed else 3)
         if plan.temporal:
-            hbm += 2 * 4 * b_pad * gx * gy * gz * 2  # carry read + write
+            hbm += 2 * esz * b_pad * gx * gy * gz * 2  # carry read + write
         overhead = DISPATCH_OVERHEAD_S + steps * STEP_OVERHEAD_S
         if streamed:
             overhead += b_pad * n_grid * STREAM_DMA_OVERHEAD_S
@@ -344,7 +392,7 @@ def plan_cost_hlo(plan: "BGPlan", h: int, w: int, n_frames: int = 1):
     if plan.temporal:
         gx, gy, gz = grid_shape(h, w, plan.cfg)
         carry = jax.ShapeDtypeStruct(
-            (int(n_frames), gx, gy, gz, 2), jnp.float32
+            (int(n_frames), gx, gy, gz, 2), plan.storage_dtype
         )
         alpha = jax.ShapeDtypeStruct((int(n_frames),), jnp.float32)
         lowered = fn.lower(frames, carry, alpha)
@@ -378,6 +426,10 @@ class BGPlan:
       quantize_output: apply the paper's output rounding at the exit.
       interpret:       Pallas interpret-mode override (``None`` = auto:
                        interpret everywhere except real TPUs).
+      precision:       storage dtype contract — ``"fp32"`` (default) or
+                       ``"bf16"`` (bf16 storage / fp32 accumulate; see the
+                       module docstring). Only ``reference`` / ``fused`` /
+                       ``fused_streamed`` implement it.
 
     Equal plans (``==``/``hash``) share one compiled executable via
     :meth:`executable`; calling the plan dispatches through it.
@@ -390,11 +442,23 @@ class BGPlan:
     mesh: Optional[jax.sharding.Mesh] = None
     quantize_output: bool = True
     interpret: Optional[bool] = None
+    precision: str = "fp32"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; expected one of "
+                f"{PRECISIONS}"
+            )
+        if self.precision == "bf16" and self.backend not in _BF16_BACKENDS:
+            raise ValueError(
+                f"precision='bf16' is implemented by backends "
+                f"{_BF16_BACKENDS}; backend {self.backend!r} has no "
+                f"storage-precision contract"
             )
         bt = self.batch_tile
         if bt is not None:
@@ -445,6 +509,18 @@ class BGPlan:
     @property
     def mesh_size(self) -> int:
         return 1 if self.mesh is None else int(self.mesh.devices.size)
+
+    @property
+    def storage_dtype(self):
+        """The jnp storage dtype the precision contract names: what the
+        kernel's operand blocks, scratch, and the temporal carry are held
+        (and shipped) in. Accumulation is always fp32."""
+        return jnp.bfloat16 if self.precision == "bf16" else jnp.float32
+
+    @property
+    def np_storage_dtype(self) -> np.dtype:
+        """Numpy view of :attr:`storage_dtype` (snapshot / wire side)."""
+        return np.dtype(self.storage_dtype)
 
     def tile_for(self, n_frames: int) -> int:
         """Effective fused-kernel tile for an ``n_frames`` pack: the plan's
@@ -516,6 +592,7 @@ class BGPlan:
             "mesh_size": self.mesh_size,
             "quantize_output": self.quantize_output,
             "interpret": self.interpret,
+            "precision": self.precision,
         }
 
     @classmethod
@@ -551,6 +628,7 @@ class BGPlan:
             mesh=mesh,
             quantize_output=bool(data.get("quantize_output", True)),
             interpret=data.get("interpret"),
+            precision=data.get("precision", "fp32"),
         )
 
     def plan_hash(self) -> str:
@@ -576,7 +654,7 @@ class BGPlan:
         return (
             f"backend={self.backend} bt={self.batch_tile} "
             f"mesh={self.mesh_size} temporal={int(self.temporal)} "
-            f"src={self.provenance}"
+            f"prec={self.precision} src={self.provenance}"
         )
 
     # ------------------------------------------------------------- dispatch
@@ -677,6 +755,7 @@ def plan_for(
     stream_input: Optional[bool] = None,
     quantize_output: bool = True,
     interpret: Optional[bool] = None,
+    precision: Optional[str] = None,
     cache=None,
 ) -> BGPlan:
     """Build a concrete :class:`BGPlan` for the given frame geometry.
@@ -690,6 +769,13 @@ def plan_for(
     budget. Pass explicit values to pin decisions and skip both; the
     result's :attr:`BGPlan.provenance` records which route won.
 
+    ``precision`` is *opt-in reduced precision*: ``None`` (the default)
+    keeps every candidate fp32 — a numerics decision must never be made
+    silently on the caller's behalf — ``"fp32"``/``"bf16"`` pin it, and
+    ``"auto"`` lets the model rank bf16 candidates against fp32 on the
+    fused family (bf16 halves step bytes, so its VMEM-feasible tiles are
+    roughly twice as large; exact-cost ties keep fp32).
+
     ``sharded=None`` auto-meshes over all local devices when more than one
     is present *and* the resolved backend shards (the single-host oracle
     backends — ``reference``/``staged`` — simply stay single-device);
@@ -698,8 +784,16 @@ def plan_for(
     ``temporal=True`` returns the video-form plan (fused in-kernel
     grid-EMA; never input-streamed).
     """
+    if precision not in (None, "auto") and precision not in PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {(None, 'auto') + PRECISIONS}, got "
+            f"{precision!r}"
+        )
     fully_auto = (
-        backend is None and stream_input is None and batch_tile is None
+        backend is None
+        and stream_input is None
+        and batch_tile is None
+        and precision in (None, "auto")
     )
     if backend is None:
         if temporal:
@@ -752,7 +846,7 @@ def plan_for(
                 f"use batch_tile<={shard} or batch_tile=None (auto)"
             )
 
-    def build(be, bt):
+    def build(be, bt, prec="fp32"):
         return BGPlan(
             cfg=cfg,
             backend=be,
@@ -761,15 +855,32 @@ def plan_for(
             mesh=mesh,
             quantize_output=quantize_output,
             interpret=interpret,
+            precision=prec,
         )
 
     fused_family = all(b in _FUSED_BACKENDS for b in candidates)
-    no_freedom = len(candidates) == 1 and (
-        batch_tile is not None or not fused_family
+    # The precision candidate axis: fp32-only unless the caller opted in.
+    # "auto" only widens the grid on the fused family — ranking an oracle
+    # backend's precision by a cost model that cannot tell them apart would
+    # be noise, and pinned "bf16" on a non-implementing backend surfaces as
+    # BGPlan's construction error below.
+    if precision == "bf16":
+        precisions = ("bf16",)
+    elif precision == "auto" and fused_family:
+        precisions = ("fp32", "bf16")
+    else:
+        precisions = ("fp32",)
+
+    no_freedom = (
+        len(candidates) == 1
+        and len(precisions) == 1
+        and (batch_tile is not None or not fused_family)
     )
     if no_freedom:
         # every decision pinned (or an oracle backend with none to make)
-        return _stamp(build(candidates[0], batch_tile), "explicit")
+        return _stamp(
+            build(candidates[0], batch_tile, precisions[0]), "explicit"
+        )
 
     # ---- measured-plan cache (fully-auto calls only: a cached entry is a
     # complete decision and must not override a pinned kwarg)
@@ -784,7 +895,11 @@ def plan_for(
             try:
                 pj = ent["plan"]
                 be, bt = pj["backend"], pj.get("batch_tile")
-                ok = be in candidates
+                prec = pj.get("precision", "fp32")
+                # a cached bf16 winner must not leak into a caller that did
+                # not opt into reduced precision (precision is a numerics
+                # decision, not just a latency one)
+                ok = be in candidates and prec in precisions
                 if (
                     ok
                     and bt is not None
@@ -793,27 +908,29 @@ def plan_for(
                 ):
                     ok = bt <= -(-int(n_frames) // mesh_size)
                 if ok:
-                    return _stamp(build(be, bt), "cache")
+                    return _stamp(build(be, bt, prec), "cache")
             except (KeyError, TypeError, ValueError):
                 pass  # stale/incompatible entry: fall through to the model
 
     # ---- roofline-model ranking over the legal candidate grid
     plans = []
-    for be in candidates:
-        if batch_tile is not None:
-            tiles = [batch_tile]
-        else:
-            cap = auto_batch_tile(
-                cfg,
-                height,
-                width,
-                n_frames,
-                stream_input=be == "fused_streamed",
-                mesh_size=mesh_size,
-                temporal=temporal,
-            )
-            tiles = sorted({t for t in _TILE_LADDER if t < cap} | {cap})
-        plans.extend(build(be, t) for t in tiles)
+    for prec in precisions:
+        for be in candidates:
+            if batch_tile is not None:
+                tiles = [batch_tile]
+            else:
+                cap = auto_batch_tile(
+                    cfg,
+                    height,
+                    width,
+                    n_frames,
+                    stream_input=be == "fused_streamed",
+                    mesh_size=mesh_size,
+                    temporal=temporal,
+                    precision=prec,
+                )
+                tiles = sorted({t for t in _TILE_LADDER if t < cap} | {cap})
+            plans.extend(build(be, t, prec) for t in tiles)
     n_eval = (
         int(n_frames)
         if n_frames is not None
@@ -823,6 +940,7 @@ def plan_for(
         plans,
         key=lambda p: (
             plan_cost(p, height, width, n_eval),
+            p.precision != "fp32",  # exact tie: precision costs quality
             p.backend != "fused",  # exact tie: no reason to pay the DMA path
             -p.batch_tile,
         ),
@@ -934,19 +1052,29 @@ def _plan_executable(plan: BGPlan):
     # ------------------------------------------------------------- temporal
     if plan.temporal:
         if plan.backend == "reference":
-            # the staged jnp oracle: grid visible between GF and TI
+            # the staged jnp oracle: grid visible between GF and TI. Under
+            # bf16 the oracle *stores* (frames, carry out) in bf16 and
+            # accumulates fp32, mirroring the fused kernel's contract; the
+            # fp32 path is byte-for-byte the pre-precision jaxpr (every
+            # added astype is a same-dtype no-op).
             from repro.video.temporal import blurred_grid_batch
+
+            sdt = plan.storage_dtype
 
             def fn(frames, carry, alpha):
                 frames = frames.astype(jnp.float32)
+                if plan.precision == "bf16":
+                    frames = frames.astype(sdt).astype(jnp.float32)
                 blurred = blurred_grid_batch(frames, cfg)
                 a = alpha.astype(jnp.float32).reshape((-1, 1, 1, 1, 1))
-                new_carry = (1.0 - a) * blurred + a * carry
+                new_carry = (1.0 - a) * blurred + a * carry.astype(
+                    jnp.float32
+                )
                 grid_f = grid_normalize(new_carry)
                 out = jax.vmap(lambda gf, f: grid_slice(gf, f, cfg))(
                     grid_f, frames
                 )
-                return _maybe_quantize(out), new_carry
+                return _maybe_quantize(out), new_carry.astype(sdt)
 
             return jax.jit(fn)
 
@@ -962,6 +1090,7 @@ def _plan_executable(plan: BGPlan):
                 batch_tile=batch_tile,
                 carry=carry,
                 alpha=alpha,
+                precision=plan.precision,
             )
 
         if mesh is None:
@@ -970,7 +1099,7 @@ def _plan_executable(plan: BGPlan):
                 out, new_carry = inner_temporal(
                     frames.astype(jnp.float32), carry, alpha
                 )
-                return _maybe_quantize(out), new_carry
+                return _maybe_quantize(out.astype(jnp.float32)), new_carry
 
             return jax.jit(fn)
 
@@ -978,14 +1107,23 @@ def _plan_executable(plan: BGPlan):
 
         def fn(frames, carry, alpha):
             out, new_carry = meshed(frames.astype(jnp.float32), carry, alpha)
-            return _maybe_quantize(out), new_carry
+            return _maybe_quantize(out.astype(jnp.float32)), new_carry
 
         return jax.jit(fn)
 
     # --------------------------------------------------------- non-temporal
     if plan.backend == "reference":
+        bf16 = plan.precision == "bf16"
 
         def fn(frames):
+            if bf16:
+                # storage emulation: round the frames the kernel would hold
+                # in bf16; the filter itself accumulates fp32 as always
+                frames = (
+                    frames.astype(jnp.float32)
+                    .astype(jnp.bfloat16)
+                    .astype(jnp.float32)
+                )
             single = lambda im: bilateral_grid_filter(
                 im, cfg, quantize_output=quant
             )
@@ -1046,12 +1184,15 @@ def _plan_executable(plan: BGPlan):
         interpret=interpret,
         batch_tile=batch_tile,
         stream_input=plan.backend == "fused_streamed",
+        precision=plan.precision,
     )
 
     if mesh is None:
 
         def fn(frames):
-            return _maybe_quantize(inner(frames.astype(jnp.float32)))
+            return _maybe_quantize(
+                inner(frames.astype(jnp.float32)).astype(jnp.float32)
+            )
 
         return jax.jit(fn)
 
@@ -1062,7 +1203,7 @@ def _plan_executable(plan: BGPlan):
         squeeze = frames.ndim == 2
         if squeeze:
             frames = frames[None]
-        out = _maybe_quantize(meshed(frames))
+        out = _maybe_quantize(meshed(frames).astype(jnp.float32))
         return out[0] if squeeze else out
 
     return jax.jit(fn)

@@ -31,15 +31,26 @@ The module doubles as the fleet operator's cache tool::
 
     python -m repro.plan_cache inspect [path] [--json]
     python -m repro.plan_cache merge OUT IN [IN ...]
-    python -m repro.plan_cache prune [path] --max-age-days N | --foreign
+    python -m repro.plan_cache prune [path] --max-age-days N | --foreign \
+        | --stale-schema
 
-``inspect`` prints every entry (key, backend/tile/mesh, measured time,
-hash, age); ``merge`` unions cache files — the controller-blessed file from
-``PlanController.bless`` or a sweep host merges into the fleet's shipped
-cache, same-key conflicts resolved fastest-measurement-first (ties to the
-newer recording); ``prune`` drops entries older than ``--max-age-days``
-and/or recorded under a different host fingerprint (``--foreign`` — foreign
-entries never match lookups here, they are dead weight in a shipped file).
+``inspect`` prints every entry (key, backend/tile/mesh/precision, measured
+time, hash, age); ``merge`` unions cache files — the controller-blessed file
+from ``PlanController.bless`` or a sweep host merges into the fleet's
+shipped cache, same-key conflicts resolved fastest-measurement-first (ties
+to the newer recording); ``prune`` drops entries older than
+``--max-age-days``, recorded under a different host fingerprint
+(``--foreign`` — foreign entries never match lookups here, they are dead
+weight in a shipped file), and/or keyed under an older cache schema
+(``--stale-schema`` — a ``v1|...`` key can never match a ``v2`` lookup, so
+old-schema entries are evicted rather than erroring or lingering forever).
+
+Schema history: v1 = the PR-7/8 plan payload; v2 = precision-aware plans
+(``BGPlan.precision`` participates in the payload and hash). Old-schema
+*files* still load (their keys simply never match current lookups); the
+``calibration`` section (fitted roofline overhead constants per host
+fingerprint, written by ``bench_plan_sweep``'s least-squares fit) rides the
+same file and survives prune/merge.
 """
 from __future__ import annotations
 
@@ -65,7 +76,11 @@ __all__ = [
 ]
 
 CACHE_ENV_VAR = "REPRO_PLAN_CACHE"
-CACHE_VERSION = 1
+# v2: BGPlan serialization gained `precision` (it participates in the plan
+# hash, so v1 measurements vouch for plans whose hash no longer reproduces).
+# Bumping the version retires every v1 key by construction — workload keys
+# embed `v{CACHE_VERSION}|` — and `prune --stale-schema` evicts the bodies.
+CACHE_VERSION = 2
 
 
 def host_fingerprint() -> str:
@@ -120,6 +135,7 @@ class PlanCache:
     def __init__(self, path: Optional[str] = None):
         self.path = os.path.expanduser(path) if path else default_cache_path()
         self._entries: Optional[dict] = None
+        self._calib: dict = {}
         self._lock = threading.Lock()
         self._warned = False
 
@@ -128,20 +144,29 @@ class PlanCache:
         if self._entries is not None:
             return self._entries
         entries: dict = {}
+        calib: dict = {}
         try:
             with open(self.path) as f:
                 data = json.load(f)
+            # Every known schema version (1..CACHE_VERSION) loads: keys
+            # embed their own `v{N}|` prefix, so entries written under an
+            # older schema are inert (never match a lookup) rather than
+            # dangerous, and `prune --stale-schema` can evict them. Future
+            # versions and foreign layouts are refused (treated as empty).
             if (
                 isinstance(data, dict)
-                and data.get("version") == CACHE_VERSION
+                and isinstance(data.get("version"), int)
+                and 1 <= data["version"] <= CACHE_VERSION
                 and isinstance(data.get("entries"), dict)
             ):
                 entries = data["entries"]
+                if isinstance(data.get("calibration"), dict):
+                    calib = data["calibration"]
             elif not self._warned:
                 self._warned = True
                 warnings.warn(
                     f"plan cache {self.path}: unrecognized layout "
-                    f"(version != {CACHE_VERSION}); treating as empty"
+                    f"(version not in 1..{CACHE_VERSION}); treating as empty"
                 )
         except FileNotFoundError:
             pass
@@ -154,10 +179,13 @@ class PlanCache:
                     f"rewrites it"
                 )
         self._entries = entries
+        self._calib = calib
         return entries
 
     def _write(self) -> None:
         payload = {"version": CACHE_VERSION, "entries": self._entries or {}}
+        if self._calib:
+            payload["calibration"] = self._calib
         d = os.path.dirname(self.path) or "."
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(prefix=".plan_cache.", dir=d)
@@ -205,9 +233,42 @@ class PlanCache:
             self._write()
         return entry
 
+    def record_calibration(self, fingerprint: str, constants: dict) -> dict:
+        """Store fitted roofline overhead constants for one host fingerprint.
+
+        ``constants`` is a plain JSON dict (``bench_plan_sweep`` writes the
+        least-squares fit of the per-step and per-streamed-frame-step
+        dispatch overheads plus the fit residual). Calibration is advisory
+        provenance — ``plan_cost`` does not consult it at ranking time, so
+        recording a fit never changes which plan a fresh process selects.
+        """
+        entry = {
+            "constants": dict(constants),
+            "recorded": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        with self._lock:
+            self._load()
+            self._calib[fingerprint] = entry
+            self._write()
+        return entry
+
+    def calibration(self, fingerprint: str) -> Optional[dict]:
+        """The recorded calibration entry for ``fingerprint``, or None."""
+        with self._lock:
+            self._load()
+            ent = self._calib.get(fingerprint)
+            return dict(ent) if isinstance(ent, dict) else None
+
+    def calibrations(self) -> Dict[str, dict]:
+        """Snapshot copy of every host's calibration entry."""
+        with self._lock:
+            self._load()
+            return dict(self._calib)
+
     def clear(self) -> None:
         with self._lock:
             self._entries = {}
+            self._calib = {}
             self._write()
 
     def entries(self) -> Dict[str, dict]:
@@ -219,25 +280,36 @@ class PlanCache:
         self,
         max_age_days: Optional[float] = None,
         foreign: bool = False,
+        stale_schema: bool = False,
         now: Optional[float] = None,
     ) -> List[str]:
-        """Drop stale and/or foreign-host entries; returns removed keys.
+        """Drop stale, foreign-host, and/or old-schema entries; returns
+        removed keys.
 
         ``max_age_days`` removes entries whose ``recorded`` stamp is older
         (or unparseable — an entry of unknown age fails the age criterion);
         ``foreign`` removes entries keyed under a different
-        :func:`host_fingerprint` (they can never match a lookup here).
-        At least one criterion is required.
+        :func:`host_fingerprint` (they can never match a lookup here);
+        ``stale_schema`` removes entries keyed under an older
+        ``CACHE_VERSION`` prefix (equally unreachable since the version is
+        baked into every :func:`workload_key`). At least one criterion is
+        required.
         """
-        if max_age_days is None and not foreign:
-            raise ValueError("prune needs max_age_days= and/or foreign=True")
+        if max_age_days is None and not foreign and not stale_schema:
+            raise ValueError(
+                "prune needs max_age_days=, foreign=True, and/or "
+                "stale_schema=True"
+            )
         fp = host_fingerprint() if foreign else None
+        prefix = f"v{CACHE_VERSION}|"
         now = time.time() if now is None else now
         removed = []
         with self._lock:
             for key, ent in list(self._load().items()):
                 drop = False
-                if foreign:
+                if stale_schema:
+                    drop = not key.startswith(prefix)
+                if not drop and foreign:
                     parts = key.split("|")
                     drop = len(parts) < 2 or parts[1] != fp
                 if not drop and max_age_days is not None:
@@ -309,18 +381,31 @@ def _better(a: dict, b: dict) -> dict:
 def merge_caches(out_path: str, in_paths: Sequence[str]) -> PlanCache:
     """Union the entries of ``in_paths`` into a cache file at ``out_path``
     (which also participates when it already exists — merging into the
-    fleet's shipped cache is the normal flow). Returns the written cache."""
+    fleet's shipped cache is the normal flow). Calibration sections union
+    per-fingerprint with the newer recording winning. Returns the written
+    cache."""
     merged: Dict[str, dict] = {}
+    calib: Dict[str, dict] = {}
     for path in [out_path, *in_paths]:
         if path != out_path and not os.path.exists(os.path.expanduser(path)):
             raise FileNotFoundError(path)
-        for key, ent in PlanCache(path).entries().items():
+        src = PlanCache(path)
+        for key, ent in src.entries().items():
             if not isinstance(ent, dict) or "plan" not in ent:
                 continue
             merged[key] = _better(merged[key], ent) if key in merged else ent
+        for fp, ent in src.calibrations().items():
+            if not isinstance(ent, dict):
+                continue
+            prev = calib.get(fp)
+            if prev is None or str(ent.get("recorded", "")) >= str(
+                prev.get("recorded", "")
+            ):
+                calib[fp] = ent
     out = PlanCache(out_path)
     with out._lock:
         out._entries = merged
+        out._calib = calib
         out._write()
     return out
 
@@ -334,6 +419,7 @@ def _format_entry(key: str, ent: dict, now: float) -> str:
         f"{key}\n"
         f"    backend={plan.get('backend')} bt={plan.get('batch_tile')} "
         f"mesh={plan.get('mesh_size')} temporal={int(bool(plan.get('temporal')))}"
+        f" prec={plan.get('precision', 'fp32')}"
         f" hash={ent.get('plan_hash')}\n"
         f"    measured_us="
         f"{'-' if not isinstance(measured, (int, float)) else f'{measured:.1f}'}"
@@ -362,27 +448,39 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     )
     mer.add_argument("out", help="destination cache file")
     mer.add_argument("inputs", nargs="+", help="source cache files")
-    pru = sub.add_parser("prune", help="drop stale and/or foreign entries")
+    pru = sub.add_parser(
+        "prune", help="drop stale, foreign, and/or old-schema entries"
+    )
     pru.add_argument("path", nargs="?", default=None)
     pru.add_argument("--max-age-days", type=float, default=None,
                      help="drop entries recorded longer ago than this")
     pru.add_argument("--foreign", action="store_true",
                      help="drop entries keyed under a different host "
                      "fingerprint")
+    pru.add_argument("--stale-schema", action="store_true",
+                     help=f"drop entries keyed under a cache schema other "
+                     f"than the current v{CACHE_VERSION}")
     args = ap.parse_args(argv)
 
     if args.cmd == "inspect":
         cache = PlanCache(args.path)
         entries = cache.entries()
+        calib = cache.calibrations()
         if args.as_json:
-            print(json.dumps({"version": CACHE_VERSION, "entries": entries},
-                             indent=1, sort_keys=True))
+            payload = {"version": CACHE_VERSION, "entries": entries}
+            if calib:
+                payload["calibration"] = calib
+            print(json.dumps(payload, indent=1, sort_keys=True))
         else:
             now = time.time()
             print(f"# {cache.path}: {len(entries)} entr"
                   f"{'y' if len(entries) == 1 else 'ies'}")
             for key in sorted(entries):
                 print(_format_entry(key, entries[key], now))
+            for fp in sorted(calib):
+                ent = calib[fp] if isinstance(calib[fp], dict) else {}
+                print(f"calibration {fp}: {json.dumps(ent.get('constants'))}"
+                      f" recorded={ent.get('recorded')}")
         return 0
     if args.cmd == "merge":
         out = merge_caches(args.out, args.inputs)
@@ -393,7 +491,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     cache = PlanCache(args.path)
     try:
         removed = cache.prune(max_age_days=args.max_age_days,
-                              foreign=args.foreign)
+                              foreign=args.foreign,
+                              stale_schema=args.stale_schema)
     except ValueError as e:
         ap.error(str(e))
     for key in removed:

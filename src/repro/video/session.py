@@ -162,7 +162,10 @@ class MultiStreamPacker:
             if sess.carry is None:
                 continue
             out[sid] = (
-                np.asarray(sess.carry, np.float32),
+                # the plan's np storage dtype (fp32 or bf16): a bf16 carry
+                # ships as bf16 bytes — half the snapshot wire — and stays
+                # bit-exact within the precision mode
+                np.asarray(sess.carry, self.plan.np_storage_dtype),
                 sess.alpha,
                 sess.frames_seen,
             )
@@ -186,13 +189,16 @@ class MultiStreamPacker:
         sess = self.sessions.get(sid)
         if sess is None:
             raise KeyError(f"stream {sid!r} not open")
-        arr = np.asarray(carry, np.float32)
+        # within a precision mode this conversion is the identity (bit-exact
+        # restore); across modes it is the storage rounding the plan's own
+        # kernel would apply on the next blend anyway
+        arr = np.asarray(carry, self.plan.np_storage_dtype)
         if arr.ndim != 4 or arr.shape[-1] != 2:
             raise ValueError(
                 f"stream {sid!r}: carry must be (gx, gy, gz, 2), "
                 f"got shape {arr.shape}"
             )
-        if not np.isfinite(arr).all():
+        if not np.isfinite(arr.astype(np.float32)).all():
             raise ValueError(
                 f"stream {sid!r}: refusing to restore a non-finite carry"
             )
@@ -286,7 +292,7 @@ class MultiStreamPacker:
             # streams, first temporal frames) are bit-identical to the
             # per-frame path, so cold and warm streams mix freely.
             h, w = batch.shape[1:]
-            zero = jnp.zeros(carry_shape(h, w, self.cfg), jnp.float32)
+            zero = jnp.zeros(carry_shape(h, w, self.cfg), plan.storage_dtype)
             carry = jnp.stack(
                 [zero if sessions[s].carry is None else sessions[s].carry
                  for s in sids]

@@ -87,8 +87,10 @@ def carry_shape(h: int, w: int, cfg: BGConfig) -> Tuple[int, int, int, int]:
     return (gx, gy, gz, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def blurred_grid_batch(frames: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("cfg", "precision"))
+def blurred_grid_batch(
+    frames: jnp.ndarray, cfg: BGConfig, precision: str = "fp32"
+) -> jnp.ndarray:
     """(n, h, w) frames -> (n, gx, gy, gz, 2) blurred homogeneous grids.
 
     One ``B_t = blur(create(f_t))`` per frame — the quantity the temporal EMA
@@ -99,8 +101,20 @@ def blurred_grid_batch(frames: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
     its column one-hots); only the intensity binning and the scatter itself
     are per-frame. Matches the per-frame ``grid_blur(grid_create(f))``
     exactly (same scatter order, same separable conv order x->y->z).
+
+    ``precision="bf16"`` is the staged oracle's precision axis: frames are
+    rounded to the bf16 storage grid before binning/scatter (as the fused
+    kernel stores them), the scatter and blur accumulate fp32, and the
+    returned grid is downcast to bf16 storage. ``"fp32"`` is byte-for-byte
+    the pre-precision jaxpr.
     """
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(
+            f"precision must be 'fp32' or 'bf16', got {precision!r}"
+        )
     frames = frames.astype(jnp.float32)
+    if precision == "bf16":
+        frames = frames.astype(jnp.bfloat16).astype(jnp.float32)
     b, h, w = frames.shape
     gx, gy, gz = grid_shape(h, w, cfg)
     # shared spatial cell indices (constants across the batch)
@@ -114,7 +128,7 @@ def blurred_grid_batch(frames: jnp.ndarray, cfg: BGConfig) -> jnp.ndarray:
     taps = gaussian_taps(cfg)  # built once, not once per frame
     for axis in (1, 2, 3):  # batched layout (b, gx, gy, gz, 2)
         grid = conv3_axis(grid, taps, axis)
-    return grid
+    return grid.astype(jnp.bfloat16) if precision == "bf16" else grid
 
 
 def temporal_denoise(
@@ -196,7 +210,8 @@ def temporal_denoise(
         # warm-up pack of a temporal stream set: no history yet, so every
         # effective alpha is 0 this step, but the carry must be produced.
         carry = jnp.zeros(
-            (n,) + carry_shape(*frames.shape[1:], plan.cfg), jnp.float32
+            (n,) + carry_shape(*frames.shape[1:], plan.cfg),
+            plan.storage_dtype,
         )
         alpha_np = np.zeros((n,), np.float32)
     if carry.shape[0] != n:

@@ -17,6 +17,7 @@ import struct
 import sys
 import zlib
 
+import ml_dtypes  # ships with jax; the codec's bfloat16 wire name
 import numpy as np
 import pytest
 
@@ -38,7 +39,7 @@ from repro.fleet.codec import (
 RNG = np.random.default_rng(0xB65)
 
 WIRE_DTYPES = [
-    np.float32, np.float64, np.float16,
+    np.float32, np.float64, np.float16, ml_dtypes.bfloat16,
     np.int8, np.int16, np.int32, np.int64,
     np.uint8, np.uint16, np.uint32, np.uint64,
     np.bool_,
@@ -166,6 +167,23 @@ def test_bitflip_fuzz_never_yields_wrong_payload():
             decode(flipped)
 
 
+@pytest.mark.parametrize("dtype", [np.float16, ml_dtypes.bfloat16])
+def test_bitflip_fuzz_half_precision(dtype):
+    """The 16-bit storage dtypes the bf16 carry/snapshot wire ships get the
+    same single-bit-flip guarantee as the int16 message above."""
+    arr = (np.arange(48, dtype=np.float32) / 7.0).reshape(4, 12).astype(dtype)
+    wire = bytearray(
+        encode("snapshot", dict(array_header(arr), sid=5), arr.tobytes())
+    )
+    rng = np.random.default_rng(0xBF16)
+    for _ in range(200):
+        i = int(rng.integers(0, len(wire)))
+        bit = 1 << int(rng.integers(0, 8))
+        flipped = bytes(wire[:i] + bytes([wire[i] ^ bit]) + wire[i + 1:])
+        with pytest.raises(CodecError):
+            decode(flipped)
+
+
 def test_bad_magic_version_and_type_bytes():
     good = encode("hello", {"wid": 0})
     for i in (0, 4, 5):  # magic, version, message-type bytes
@@ -236,6 +254,30 @@ def test_decode_array_revalidates_everything():
     out = decode_array(hdr, payload)
     assert out.flags.owndata or out.base is None
     assert np.array_equal(out, arr)
+
+
+def test_bfloat16_travels_by_name_not_void():
+    """bfloat16's numpy ``.str`` is ``'<V2'`` (kind 'V'), which would decode
+    as raw void — the codec ships it under the name ``"bfloat16"`` and must
+    refuse the void spelling outright."""
+    arr = np.asarray([1.5, -2.25, 65280.0], ml_dtypes.bfloat16)
+    hdr = array_header(arr)
+    assert hdr["dtype"] == "bfloat16"
+    out = decode_array(hdr, arr.tobytes())
+    assert out.dtype == arr.dtype and out.tobytes() == arr.tobytes()
+    with pytest.raises(CodecError, match="not allowed"):
+        decode_array({"shape": [3], "dtype": "<V2"}, arr.tobytes())
+    with pytest.raises(CodecError, match="not allowed"):
+        array_header(np.zeros(3, np.dtype("V2")))
+    # non-finite bit patterns ride the snapshot wire bit-exact
+    specials = np.asarray(
+        [np.nan, np.inf, -np.inf, 0.0], np.float32
+    ).astype(ml_dtypes.bfloat16)
+    out2 = decode_array(array_header(specials), specials.tobytes())
+    assert out2.tobytes() == specials.tobytes()
+    # byte-count validation knows the 2-byte item size
+    with pytest.raises(CodecError, match="needs"):
+        decode_array({"shape": [4], "dtype": "bfloat16"}, arr.tobytes())
 
 
 def test_decode_array_scalar_shape():

@@ -590,6 +590,112 @@ def test_plan_serialization_round_trip():
         BGPlan.from_json({**d, "version": 99})
 
 
+# --------------------------------------------------------- mixed precision
+def test_precision_validation_and_serialization():
+    from repro.plan import PRECISIONS, precision_bytes
+
+    assert PRECISIONS == ("fp32", "bf16")
+    assert precision_bytes("fp32") == 4 and precision_bytes("bf16") == 2
+    with pytest.raises(ValueError, match="precision"):
+        precision_bytes("fp16")
+    with pytest.raises(ValueError, match="precision"):
+        BGPlan(cfg=CFG, backend="fused", precision="int8")
+    # bf16 storage exists only on the kernel/reference family
+    with pytest.raises(ValueError, match="precision"):
+        BGPlan(cfg=CFG, backend="streaming", precision="bf16")
+    p = BGPlan(cfg=CFG, backend="fused", batch_tile=4, precision="bf16")
+    assert p.storage_dtype == jnp.bfloat16
+    assert np.dtype(p.np_storage_dtype).itemsize == 2
+    assert "prec=bf16" in p.describe()
+    d = p.to_json()
+    assert d["precision"] == "bf16"
+    q = BGPlan.from_json(d)
+    assert q == p and q.plan_hash() == p.plan_hash()
+    # precision participates in the hash (a v1 cache hash cannot vouch)
+    p32 = BGPlan(cfg=CFG, backend="fused", batch_tile=4)
+    assert p.plan_hash() != p32.plan_hash()
+    # pre-precision payloads (no field) deserialize as fp32
+    legacy = {k: v for k, v in p32.to_json().items() if k != "precision"}
+    assert BGPlan.from_json(legacy) == p32
+
+
+def test_precision_step_bytes_and_tile():
+    from repro.plan import MAX_AUTO_TILE, step_bytes_per_frame
+
+    # bf16 exactly halves every step-bytes term (storage-dtype contract)
+    for kw in ({}, {"stream_input": True}, {"temporal": True}):
+        base = step_bytes_per_frame(CFG, 60, 96, **kw)
+        half = step_bytes_per_frame(CFG, 60, 96, precision="bf16", **kw)
+        assert base == 2 * half
+    # and the tuner sees it: at the VMEM-capped paper HD geometry the
+    # feasible tile at least doubles (floor division can only round up)
+    paper = BGConfig(r=12, sigma_s=8.0, sigma_r=70.0)
+    a32 = auto_batch_tile(paper, 1080, 1920)
+    a16 = auto_batch_tile(paper, 1080, 1920, precision="bf16")
+    assert min(2 * a32, MAX_AUTO_TILE) <= a16 <= MAX_AUTO_TILE
+    # bf16 plans cost less at equal geometry (halved HBM operand traffic)
+    from repro.plan import plan_cost
+
+    f32 = BGPlan(cfg=CFG, backend="fused", batch_tile=4)
+    f16 = BGPlan(cfg=CFG, backend="fused", batch_tile=4, precision="bf16")
+    assert plan_cost(f16, 60, 96, 8) < plan_cost(f32, 60, 96, 8)
+
+
+def test_plan_for_precision_modes():
+    # the default (precision=None) NEVER silently changes numerics: fp32
+    p = plan_for(CFG, 60, 96, n_frames=8, sharded=False, cache=False)
+    assert p.precision == "fp32"
+    # pinned bf16 is honored
+    p16 = plan_for(
+        CFG, 60, 96, n_frames=8, sharded=False, cache=False, precision="bf16"
+    )
+    assert p16.precision == "bf16" and p16.provenance == "model"
+    # "auto" lets the roofline rank both; bf16's halved traffic wins on the
+    # fused family
+    pa = plan_for(
+        CFG, 60, 96, n_frames=8, sharded=False, cache=False, precision="auto"
+    )
+    assert pa.precision == "bf16"
+    # "auto" on a non-fused pinned backend degrades to fp32, not an error
+    pr = plan_for(
+        CFG, 60, 96, backend="staged", cache=False, precision="auto"
+    )
+    assert pr.precision == "fp32"
+    with pytest.raises(ValueError, match="precision"):
+        plan_for(CFG, 60, 96, sharded=False, precision="fp64")
+
+
+def test_bf16_mode_dispatch_invariants():
+    """Within bf16 mode the PR's bit-level contracts mirror fp32's: the
+    manual-DMA streamed path is bit-identical to the default path, and an
+    ``alpha == 0`` temporal blend is the exact identity."""
+    imgs = _frames(3, seed=71)
+    p16 = BGPlan(cfg=CFG, backend="fused", interpret=True, precision="bf16")
+    p16s = BGPlan(
+        cfg=CFG, backend="fused_streamed", interpret=True, precision="bf16"
+    )
+    out16 = np.asarray(p16(imgs))
+    np.testing.assert_array_equal(out16, np.asarray(p16s(imgs)))
+    # alpha == 0 bit-identity (zero carry, all-cold pack)
+    tp = p16.with_options(temporal=True)
+    carry = jnp.zeros((3,) + carry_shape(H, W, CFG), p16.storage_dtype)
+    out_t, new_c = tp(imgs, carry=carry, alpha=np.zeros(3, np.float32))
+    np.testing.assert_array_equal(out16, np.asarray(out_t))
+    assert np.asarray(new_c).dtype == p16.np_storage_dtype
+    # the staged jnp oracle's bf16 axis tracks the fused path to the
+    # quantization-level tolerance (storage rounding only, fp32 accumulate)
+    ref16 = BGPlan(cfg=CFG, backend="reference", precision="bf16")
+    np.testing.assert_allclose(
+        np.asarray(ref16(imgs), np.float32), out16.astype(np.float32),
+        atol=2.0,
+    )
+    # fp32 plans are byte-for-byte unaffected by the precision plumbing
+    p32 = BGPlan(cfg=CFG, backend="fused", interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(_pre_fused(imgs)), np.asarray(p32(imgs))
+    )
+
+
 def test_plan_provenance_labels():
     # direct construction = the kernel-default heuristic route
     assert BGPlan(cfg=CFG).provenance == "default"

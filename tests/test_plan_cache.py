@@ -136,6 +136,110 @@ def test_incompatible_cached_backend_falls_back_to_model(tmp_path):
     assert got.backend != "fused_streamed"
 
 
+def test_cached_bf16_plan_needs_precision_opt_in(tmp_path):
+    pc = PlanCache(str(tmp_path / "cache.json"))
+    winner = BGPlan(cfg=CFG, backend="fused", batch_tile=1, precision="bf16")
+    pc.record(_key(), winner, measured_us=1.0)
+    # the default (precision=None) pins fp32: a bf16 winner must not change
+    # the caller's numerics silently, so resolution falls back to the model
+    got = plan_for(CFG, H, W, n_frames=B, sharded=False, cache=pc)
+    assert got.provenance == "model" and got.precision == "fp32"
+    # precision="auto" opts in and adopts the measured bf16 winner
+    hit = plan_for(
+        CFG, H, W, n_frames=B, sharded=False, cache=pc, precision="auto"
+    )
+    assert hit.provenance == "cache"
+    assert hit.precision == "bf16" and hit.batch_tile == 1
+    # pre-precision cache entries (no field) resolve as fp32 on the default
+    ent = pc.lookup(_key())
+    assert ent["plan"]["precision"] == "bf16"
+    pc.record(_key(), BGPlan(cfg=CFG, backend="fused", batch_tile=1),
+              measured_us=1.0)
+    legacy = plan_for(CFG, H, W, n_frames=B, sharded=False, cache=pc)
+    assert legacy.provenance == "cache" and legacy.precision == "fp32"
+
+
+def test_old_schema_file_loads_and_stale_schema_prunes(tmp_path):
+    import warnings as _warnings
+
+    path = tmp_path / "cache.json"
+    pc = PlanCache(str(path))
+    pc.record(_key(), BGPlan(cfg=CFG, backend="fused", batch_tile=2),
+              measured_us=10.0)
+    # plant an old-schema entry and stamp the file as the older version:
+    # it must load warning-free (old keys are inert, not dangerous)
+    data = json.loads(path.read_text())
+    old_key = "v1|" + _key().split("|", 1)[1]
+    data["entries"][old_key] = dict(data["entries"][_key()])
+    data["version"] = 1
+    path.write_text(json.dumps(data))
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        pc2 = PlanCache(str(path))
+        assert len(pc2) == 2
+        assert pc2.lookup(old_key) is not None  # direct key access works
+    # ...but the v1 entry can never match a current workload_key lookup
+    assert _key().startswith(f"v{CACHE_VERSION}|") and CACHE_VERSION > 1
+    # prune --stale-schema evicts exactly the old-schema body
+    removed = pc2.prune(stale_schema=True)
+    assert removed == [old_key]
+    assert pc2.lookup(_key()) is not None
+    # a criterion-free prune still raises
+    with pytest.raises(ValueError, match="prune needs"):
+        pc2.prune()
+
+
+def test_calibration_round_trip_and_merge(tmp_path):
+    from repro.plan_cache import merge_caches
+
+    a = PlanCache(str(tmp_path / "a.json"))
+    fp = host_fingerprint()
+    assert a.calibration(fp) is None
+    a.record(_key(), BGPlan(cfg=CFG, backend="fused", batch_tile=2),
+             measured_us=5.0)
+    a.record_calibration(fp, {"step_overhead_s": 2e-6, "n_rows": 12})
+    # survives reload and subsequent entry writes
+    a2 = PlanCache(str(tmp_path / "a.json"))
+    assert a2.calibration(fp)["constants"]["step_overhead_s"] == 2e-6
+    a2.record(_key(temporal=True),
+              BGPlan(cfg=CFG, backend="fused", batch_tile=1))
+    assert PlanCache(str(tmp_path / "a.json")).calibration(fp) is not None
+    # merge unions calibration per fingerprint, newest recording wins
+    b = PlanCache(str(tmp_path / "b.json"))
+    b.record_calibration(fp, {"step_overhead_s": 9e-6})
+    b.record_calibration("other-4cpu-tpu", {"step_overhead_s": 1e-6})
+    merged = merge_caches(str(tmp_path / "o.json"),
+                          [str(tmp_path / "a.json"), str(tmp_path / "b.json")])
+    assert merged.calibration(fp)["constants"]["step_overhead_s"] == 9e-6
+    assert merged.calibration("other-4cpu-tpu") is not None
+    # and prune never touches the calibration section
+    merged.record(_key(), BGPlan(cfg=CFG, backend="fused", batch_tile=2))
+    merged.prune(foreign=True)
+    assert merged.calibration(fp) is not None
+
+
+def test_cli_stale_schema_and_calibration_inspect(tmp_path, capsys):
+    from repro.plan_cache import main
+
+    p = tmp_path / "c.json"
+    pc = PlanCache(str(p))
+    pc.record(_key(), BGPlan(cfg=CFG, backend="fused", batch_tile=2,
+                             precision="bf16"), measured_us=7.0)
+    pc.record_calibration(host_fingerprint(), {"step_overhead_s": 3e-6})
+    data = json.loads(p.read_text())
+    data["entries"]["v1|old|k"] = {"plan": {"backend": "fused"},
+                                   "plan_hash": "x"}
+    p.write_text(json.dumps(data))
+    # inspect shows the precision column and the calibration section
+    assert main(["inspect", str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "prec=bf16" in out and "calibration" in out
+    # --stale-schema is a valid sole criterion and evicts only the v1 body
+    assert main(["prune", str(p), "--stale-schema"]) == 0
+    assert "removed 1" in capsys.readouterr().out
+    assert set(PlanCache(str(p)).entries()) == {_key()}
+
+
 def test_workload_key_separates_workloads():
     keys = {
         _key(),
